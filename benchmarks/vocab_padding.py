@@ -1,0 +1,30 @@
+"""Paper Fig. 20: logit-layer throughput vs vocabulary size.
+
+The paper's rule: pad v to a multiple of 64 (A100) — 128 lanes on TPU.  We
+sweep v around 50257 and report the analytic utilization cliff, plus the
+system-level padded_vocab_size every config gets automatically.
+"""
+from repro.configs.base import ModelConfig
+from repro.core.gemm_model import GEMM, estimate
+from repro.core.hardware import get_hardware
+
+
+def run():
+    rows = []
+    hw = get_hardware("tpu_v5e")
+    b, s, h = 4, 2048, 2560
+    for v in (50176, 50200, 50257, 50280, 50304, 50432):
+        g = GEMM("logit", b * s, h, v)
+        e = estimate(g, hw)
+        rows.append((f"vocab_padding/v{v}", 0.0,
+                     f"tflops={e.achieved_tflops:.1f};util={e.tile_util:.4f}"))
+    aligned = estimate(GEMM("l", b * s, h, 50304), hw).achieved_tflops
+    ragged = estimate(GEMM("l", b * s, h, 50257), hw).achieved_tflops
+    assert aligned >= ragged
+    cfg = ModelConfig(name="v", family="dense", num_layers=1, d_model=h,
+                      num_heads=20, num_kv_heads=20, d_ff=4 * h,
+                      vocab_size=50257)
+    rows.append(("vocab_padding/system_padded_vocab", 0.0,
+                 f"50257->{cfg.padded_vocab_size}"))
+    assert cfg.padded_vocab_size == 50304  # the nanoGPT number
+    return rows

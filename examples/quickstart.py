@@ -1,0 +1,52 @@
+"""Quickstart: the co-design workflow on the paper's GPT-3 2.7B case study.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Check a model shape against the hardware rules (paper §VI-B on TPU v5e).
+2. Get ranked nearby-shape proposals at ~constant parameter count (Fig. 1).
+3. Sanity-train the original and the advised shape for a few steps on CPU.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.configs.gpt3_2p7b import VARIANTS
+from repro.core import advisor
+from repro.data.pipeline import make_batch
+from repro.models import init_lm
+from repro.optim.adamw import init_opt
+from repro.train.train_step import make_train_step
+
+c0 = VARIANTS["c0"]  # Brown et al. shape: h=2560, a=32 (head_dim 80)
+
+print("=== 1. alignment report (TPU v5e rules) ===")
+for f in advisor.check_alignment(c0, tp=16):
+    print(f"  [{f.severity:4s}] {f.rule}: {f.message}")
+
+print("\n=== 2. shape proposals (param-preserving) ===")
+for p in advisor.advise(c0, microbatch=4)[:5]:
+    print(f"  {p.predicted_speedup:.3f}x  {p.change}  "
+          f"(params {p.param_delta:+.2%}, {p.tflops:.0f} TF/s analytic)")
+best = advisor.best_combined(c0)
+print(f"  combined: {best.predicted_speedup:.3f}x via '{best.change}'")
+
+print("\n=== 3. tiny training sanity (reduced config, CPU) ===")
+import dataclasses
+tiny = dataclasses.replace(c0, num_layers=2, d_model=128, num_heads=4,
+                           num_kv_heads=4, d_ff=512, vocab_size=512,
+                           dtype="float32", name="tiny-c0")
+tc = TrainConfig(total_steps=20, warmup_steps=2, learning_rate=1e-3)
+shape = ShapeConfig("tiny", 128, 4, "train")
+params = init_lm(jax.random.PRNGKey(0), tiny)
+opt = init_opt(params, tc)
+step = jax.jit(make_train_step(tiny, tc), donate_argnums=(0, 1))
+for i in range(20):
+    batch = {k: jnp.asarray(v) for k, v in make_batch(tiny, shape, i).items()}
+    params, opt, m = step(params, opt, batch)
+    if i % 5 == 0 or i == 19:
+        print(f"  step {i:3d} loss {float(m['loss']):.4f}")
+print("done — see examples/shape_advisor.py for the full 10-arch sweep")

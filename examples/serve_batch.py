@@ -1,0 +1,16 @@
+"""Batched serving example: prefill a batch of prompts and decode with the
+production cache layout (the decode_32k dry-run path, at CPU scale).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_driver
+
+if __name__ == "__main__":
+    serve_driver.main([
+        "--arch", "internlm2-1.8b", "--smoke",
+        "--batch", "8", "--prompt-len", "64", "--gen", "32",
+    ])

@@ -1,0 +1,29 @@
+"""Run the hardware-shape advisor over every assigned architecture at the
+production parallelism (tp=16), printing findings and the best proposal —
+the paper's contribution applied across the model zoo.
+
+    PYTHONPATH=src python examples/shape_advisor.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config, list_archs
+from repro.core import advisor
+
+TP = 16
+
+for name in list_archs(assigned_only=True):
+    cfg = get_config(name)
+    findings = [f for f in advisor.check_alignment(cfg, tp=TP)
+                if f.severity != "ok"]
+    print(f"\n=== {name} ({cfg.param_count() / 1e9:.1f}B, family={cfg.family}) ===")
+    if not findings:
+        print("  all shape rules satisfied at tp=16")
+    for f in findings:
+        print(f"  [{f.severity:4s}] {f.rule}: {f.message}")
+    props = advisor.advise(cfg, tp=TP, microbatch=1)
+    for p in props[:2]:
+        print(f"  proposal: {p.predicted_speedup:.3f}x  {p.change} "
+              f"(params {p.param_delta:+.2%})")

@@ -1,0 +1,38 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+CPU with checkpointing, using the production training stack.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The config is a scaled GPT-family shape chosen WITH the advisor: head_dim
+128, d_ff lane-aligned, vocab padded to 50304.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+from repro.launch import train as train_driver
+
+CFG_100M = ModelConfig(
+    name="gpt-100m-aligned", family="dense",
+    num_layers=8, d_model=512, num_heads=4, num_kv_heads=4,
+    d_ff=2048, vocab_size=50257,  # padded to 50304 automatically
+    mlp_type="gelu", norm_type="layernorm", dtype="float32",
+)
+register(CFG_100M, CFG_100M)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    print(f"params: {CFG_100M.param_count() / 1e6:.1f}M")
+    train_driver.main([
+        "--arch", "gpt-100m-aligned",
+        "--steps", str(args.steps),
+        "--global-batch", "2", "--seq-len", "128",
+        "--lr", "6e-4", "--checkpoint-every", "100",
+        "--checkpoint-dir", "/tmp/repro_100m_ckpt",
+        "--log-every", "20",
+    ])

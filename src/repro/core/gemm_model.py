@@ -1,0 +1,114 @@
+"""Analytic GEMM/BMM cost model (paper §III, §V) — hardware-parametric.
+
+Predicted kernel time = max(compute_time, memory_time, launch_overhead) where
+
+  compute_time = padded_flops / (peak_flops * wave_efficiency)
+  memory_time  = bytes_moved / hbm_bw
+
+`padded_flops` folds in tensor-core/tile quantization (see quantization.py);
+`wave_efficiency` applies only on wave-scheduled hardware (GPUs).  The model
+reproduces the paper's Figures 5-10 qualitatively: throughput rises with
+arithmetic intensity, dips at misaligned dims and at wave boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from .hardware import Hardware, get_hardware
+from . import quantization as q
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMM:
+    """C[b](m,n) += A[b](m,k) @ B[b](k,n), `batch` independent problems.
+
+    `name` ties the GEMM back to its transformer module (Table II).
+    `weight_bytes` lets callers mark B as a resident weight (counted once per
+    step for memory-traffic purposes regardless of batch).
+    """
+
+    name: str
+    m: int
+    k: int
+    n: int
+    batch: int = 1
+    dtype_bytes: int = 2
+    weight_is_b: bool = True  # B is a weight matrix (vs. activation BMM)
+    count: int = 1  # how many times this GEMM occurs (e.g. per layer)
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k * self.n * self.batch * self.count
+
+    @property
+    def bytes_moved(self) -> float:
+        """HBM traffic assuming A, B, C each move once (no fusion credit)."""
+        a = self.m * self.k
+        b = self.k * self.n
+        c = self.m * self.n
+        return (a + b + c) * self.batch * self.dtype_bytes * self.count
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_moved, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMMEstimate:
+    gemm: GEMM
+    time_s: float
+    compute_s: float
+    memory_s: float
+    tile_util: float
+    wave_eff: float
+    achieved_tflops: float
+    bound: str  # "compute" | "memory" | "overhead"
+
+    @property
+    def efficiency(self) -> float:
+        """Achieved/peak — the quantity the paper plots."""
+        return self.tile_util * self.wave_eff
+
+
+def estimate(gemm: GEMM, hw: Optional[Hardware] = None) -> GEMMEstimate:
+    hw = hw or get_hardware()
+    util = q.tile_utilization(gemm.m, gemm.n, gemm.k, hw, gemm.dtype_bytes)
+    weff = q.wave_efficiency(gemm.m, gemm.n, hw, gemm.batch)
+    eff_flops = hw.peak_flops * util * weff
+    compute_s = gemm.flops / eff_flops
+    memory_s = gemm.bytes_moved / hw.hbm_bw
+    over_s = hw.launch_overhead * gemm.count
+    time_s = max(compute_s, memory_s, over_s)
+    bound = (
+        "compute"
+        if time_s == compute_s
+        else ("memory" if time_s == memory_s else "overhead")
+    )
+    return GEMMEstimate(
+        gemm=gemm,
+        time_s=time_s,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        tile_util=util,
+        wave_eff=weff,
+        achieved_tflops=gemm.flops / time_s / 1e12,
+        bound=bound,
+    )
+
+
+def estimate_many(gemms: list[GEMM], hw: Optional[Hardware] = None) -> list[GEMMEstimate]:
+    hw = hw or get_hardware()
+    return [estimate(g, hw) for g in gemms]
+
+
+def total_time(gemms: list[GEMM], hw: Optional[Hardware] = None) -> float:
+    return sum(e.time_s for e in estimate_many(gemms, hw))
+
+
+def throughput_tflops(gemms: list[GEMM], hw: Optional[Hardware] = None) -> float:
+    """End-to-end achieved TFLOP/s over a GEMM set (the paper's y-axis)."""
+    t = total_time(gemms, hw)
+    f = sum(g.flops for g in gemms)
+    return f / t / 1e12 if t > 0 else 0.0

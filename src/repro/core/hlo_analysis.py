@@ -1,0 +1,416 @@
+"""Structural analyzer for optimized HLO text: FLOPs / HBM bytes / collective
+bytes with while-loop trip-count multiplication.
+
+Why: `compiled.cost_analysis()` (XLA HloCostAnalysis) visits a while body
+ONCE, so any model that scans over layers or gradient-accumulation
+microbatches under-reports FLOPs/bytes by the trip count (we measured ~50x on
+a 24-layer scan x 16 microbatches).  This module parses `compiled.as_text()`
+and walks the computation graph, multiplying loop bodies by their trip counts
+(taken from XLA's own `backend_config={"known_trip_count":{"n":...}}`),
+giving honest per-chip roofline terms.
+
+Counting rules:
+  flops       — dot ops: 2 * prod(output dims) * prod(lhs contracting dims),
+                with operand shapes resolved through a per-computation symbol
+                table; recursion into fusion/call/while(xN)/conditional(max).
+  hbm bytes   — per top-level instruction: operand + output buffer sizes;
+                fusion bodies are internal (registers/VMEM) and counted at
+                the op boundary; parameter/constant/tuple plumbing skipped.
+  collectives — output-shape bytes per all-gather / all-reduce /
+                reduce-scatter / all-to-all / collective-permute, x trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy",
+    # dtype legalization plumbing: XLA:CPU upcasts bf16 compute to f32 with
+    # convert chains that a TPU build would not emit; tensor traffic is
+    # already charged at producers/consumers.
+    "convert",
+    # control plumbing: bodies are walked and charged separately
+    "while", "conditional", "call", "optimization-barrier",
+}
+
+
+def _shape_list(txt: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(txt):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(txt: str) -> float:
+    total = 0
+    for dtype, dims in _shape_list(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return float(total)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_txt: str        # output type (single shape or tuple text)
+    operands_txt: str   # inside the opcode's parens
+    attrs_txt: str      # after the closing paren (metadata, configs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    symbols: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _match_paren(s: str, start: int) -> int:
+    """Index just past the paren that closes s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        c = s[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\s*\(")
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # output type: tuple "( ... )" (may contain /*index=N*/ comments) or shape
+    if rest.startswith("("):
+        end = _match_paren(rest, 0)
+        out_txt = rest[:end]
+        rest = rest[end:]
+    else:
+        sm = re.match(r"\s*[a-z]\d*[a-z0-9]*\[[0-9,]*\](?:\{[^{}]*\})?", rest)
+        if not sm:
+            return None
+        out_txt = sm.group(0)
+        rest = rest[sm.end():]
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    p0 = om.end() - 1
+    p1 = _match_paren(rest, p0)
+    return Instr(name, opcode, out_txt, rest[p0 + 1:p1 - 1], rest[p1:])
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            s = line.lstrip()
+            if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                is_entry = s.startswith("ENTRY")
+                if is_entry:
+                    s = s[len("ENTRY"):].lstrip()
+                name = s.split(" ", 1)[0].split("(", 1)[0].lstrip("%")
+                if name in ("HloModule",):
+                    continue
+                cur = Computation(name)
+                if is_entry:
+                    entry = name
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.out_txt
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)="
+    r"(?:{([^}]*)}|%?([\w.\-]+))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _called_comps(attrs: str) -> List[str]:
+    out = []
+    for m in _CALLED_RE.finditer(attrs):
+        if m.group(1) is not None:
+            out += [x.strip().lstrip("%") for x in m.group(1).split(",")]
+        else:
+            out.append(m.group(2))
+    return out
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(ins.attrs_txt)
+    if m:
+        return max(int(m.group(1)), 1)
+    # fallback: largest s32 scalar constant in the condition computation
+    for m2 in _CALLED_RE.finditer(ins.attrs_txt):
+        pass
+    cond = None
+    cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs_txt)
+    if cm:
+        cond = comps.get(cm.group(1))
+    best = 1
+    if cond:
+        for i2 in cond.instrs:
+            if i2.opcode == "constant" and "s32[]" in i2.out_txt:
+                m3 = re.search(r"^\s*(-?\d+)", i2.operands_txt)
+                if m3:
+                    best = max(best, int(m3.group(1)))
+    return best
+
+
+def _operand_bytes_list(ins: Instr, comp: Computation) -> List[float]:
+    out = []
+    for name in _OPERAND_RE.findall(ins.operands_txt):
+        shape = comp.symbols.get(name)
+        if shape:
+            out.append(_shape_bytes(shape))
+    return out
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> float:
+    return float(sum(_operand_bytes_list(ins, comp)))
+
+
+def _is_buffer_update(ins: Instr) -> bool:
+    """Lowered in-place updates carry the originating jax op in metadata
+    (dynamic_update_slice / scatter); elementwise fusions do not."""
+    return ("dynamic_update_slice" in ins.attrs_txt
+            or "/scatter" in ins.attrs_txt)
+
+
+def _fusion_bytes(ins: Instr, comp: Computation, has_dus: bool = False) -> float:
+    """Kind-aware fusion traffic.
+
+    kLoop fusions stream one element per operand per output element — an
+    operand accessed through a dynamic-slice/broadcast inside the fusion
+    contributes ~min(operand, output) bytes, NOT its full size (charging the
+    full buffer made every scanned layer 'read' the whole (L, ...) stack).
+    kInput fusions (reduce roots) legitimately read their full operands.
+    Buffer updates (DUS in the body — scan ys-stacking) use the aliasing
+    rule: traffic ~ 2x the update payload, the big buffer is aliased.
+    """
+    if has_dus or _is_buffer_update(ins):
+        return _buffer_update_bytes(ins, comp)
+    out_b = _shape_bytes(ins.out_txt)
+    ops = _operand_bytes_list(ins, comp)
+    if "kind=kLoop" in ins.attrs_txt:
+        return out_b + sum(min(o, out_b) for o in ops)
+    return out_b + sum(ops)
+
+
+def _buffer_update_bytes(ins: Instr, comp: Computation) -> float:
+    """Aliasing-aware traffic for in-place buffer updates (dynamic-update-
+    slice and DUS-rooted fusions): XLA aliases the big buffer in/out, so real
+    HBM traffic is ~2x the update payload, not the whole buffer.  All
+    buffer-sized operands are excluded (CPU legalization can keep both an
+    f32 and a bf16 copy of the same logical buffer)."""
+    out_b = _shape_bytes(ins.out_txt)
+    ops = _operand_bytes_list(ins, comp)
+    big = [o for o in ops if o >= out_b * 0.45]  # buffer-like (any dtype width)
+    if big:
+        small = sum(o for o in ops if o < out_b * 0.45)
+        return 2.0 * small
+    return out_b + sum(ops)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_shapes = _shape_list(ins.out_txt)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", ins.attrs_txt)
+    ops = _OPERAND_RE.findall(ins.operands_txt)
+    lhs_shape = comp.symbols.get(ops[0]) if ops else None
+    if not m or not lhs_shape:
+        return 2.0 * out_elems
+    lhs_dims = _shape_list(lhs_shape)
+    if not lhs_dims:
+        return 2.0 * out_elems
+    dims = lhs_dims[0][1]
+    k = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(dims):
+            k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _is_s2(out_txt: str) -> bool:
+    """True if a shape has two equal >=2048 dims — the s^2 signature of
+    naive attention score/mask/softmax tensors (logits (s, v) have unequal
+    big dims and are excluded)."""
+    for _, dims in _shape_list(out_txt):
+        big = [d for d in dims if d >= 2048]
+        if len(big) >= 2 and len(set(big)) < len(big):
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class Counts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    dots: float = 0.0
+    loops: Dict[str, int] = dataclasses.field(default_factory=dict)
+    s2_bytes: float = 0.0  # bytes moved through s^2 attention tensors
+
+    def scaled(self, k: float) -> "Counts":
+        return Counts(self.flops * k, self.bytes * k,
+                      {c: v * k for c, v in self.coll.items()},
+                      self.dots * k, dict(self.loops), self.s2_bytes * k)
+
+    def add(self, o: "Counts"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for c in self.coll:
+            self.coll[c] += o.coll[c]
+        self.dots += o.dots
+        self.loops.update(o.loops)
+        self.s2_bytes += o.s2_bytes
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes, "dots": self.dots,
+                "coll": dict(self.coll), "coll_total": self.coll_total,
+                "loops": dict(self.loops)}
+
+
+def _analyze(comps: Dict[str, Computation], name: str,
+             memo: Dict[str, Counts]) -> Counts:
+    if name in memo:
+        return memo[name]
+    memo[name] = Counts()  # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    total = Counts()
+    for ins in comp.instrs:
+        op = ins.opcode
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if op == "while":
+            trips = _trip_count(ins, comps)
+            bm = re.search(r"body=%?([\w.\-]+)", ins.attrs_txt)
+            if bm:
+                sub = _analyze(comps, bm.group(1), memo)
+                total.add(sub.scaled(trips))
+                total.loops[ins.name] = trips
+            continue
+        if op == "conditional":
+            subs = [_analyze(comps, b, memo) for b in _called_comps(ins.attrs_txt)]
+            if subs:
+                total.add(max(subs, key=lambda s: s.flops + s.bytes))
+            continue
+        if op in ("call", "async-start"):
+            for c in _called_comps(ins.attrs_txt):
+                total.add(_analyze(comps, c, memo))
+            continue
+        if op == "fusion":
+            plumbing_only = True
+            has_dus = False
+            for c in _called_comps(ins.attrs_txt):
+                sub = _analyze(comps, c, memo)
+                total.flops += sub.flops
+                total.dots += sub.dots
+                for k in total.coll:
+                    total.coll[k] += sub.coll[k]
+                body = comps.get(c)
+                if body is not None:
+                    has_dus |= any(i.opcode == "dynamic-update-slice"
+                                   for i in body.instrs)
+                if body is None or any(
+                        i.opcode not in ("convert", "bitcast", "parameter",
+                                         "copy", "constant", "reshape",
+                                         "transpose")
+                        for i in body.instrs):
+                    plumbing_only = False
+            if not plumbing_only:
+                _charge(total, ins, _fusion_bytes(ins, comp, has_dus))
+            continue
+        if base in _COLLECTIVES:
+            nbytes = _shape_bytes(ins.out_txt)
+            total.coll[base] += nbytes
+            total.bytes += nbytes + _operand_bytes(ins, comp)
+            continue
+        if op in ("dot", "convolution"):
+            total.flops += _dot_flops(ins, comp)
+            total.dots += 1
+            _charge(total, ins,
+                    _shape_bytes(ins.out_txt) + _operand_bytes(ins, comp))
+            continue
+        if op in _SKIP_BYTES_OPS:
+            continue
+        if op == "dynamic-slice":
+            # reads only the slice; the big operand buffer is not streamed
+            _charge(total, ins, 2.0 * _shape_bytes(ins.out_txt))
+            continue
+        if op in ("dynamic-update-slice", "scatter") or (
+                op == "select" and _is_buffer_update(ins)):
+            _charge(total, ins, _buffer_update_bytes(ins, comp))
+            continue
+        if op in ("custom-call",):
+            _charge(total, ins, _shape_bytes(ins.out_txt))
+            continue
+        _charge(total, ins,
+                _shape_bytes(ins.out_txt) + _operand_bytes(ins, comp))
+    memo[name] = total
+    return total
+
+
+def _charge(total: Counts, ins: Instr, nbytes: float):
+    total.bytes += nbytes
+    if _is_s2(ins.out_txt):
+        total.s2_bytes += nbytes
+
+
+def analyze_hlo(text: str) -> Counts:
+    """Trip-count-aware Counts for the entry computation of an HLO module."""
+    comps, entry = parse_module(text)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].instrs)) if comps else ""
+    return _analyze(comps, entry, {})

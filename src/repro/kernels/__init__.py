@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+  matmul           — tile-aligned GEMM with explicit BlockSpec VMEM tiling
+  flash_attention  — FlashAttention-2 (causal, GQA) online-softmax kernel
+  ssd              — Mamba2 SSD intra-chunk dual-form kernel
+"""
+from .matmul.ops import matmul, alignment_report
+from .flash_attention.ops import flash_attention
+from .ssd.ops import ssd_chunk
+
+__all__ = ["matmul", "alignment_report", "flash_attention", "ssd_chunk"]

@@ -1,0 +1,106 @@
+"""FlashAttention-2-style Pallas TPU kernel: online-softmax blocked attention
+with causal masking and GQA head mapping.
+
+Grid (batch*q_heads, q_blocks, kv_blocks), kv innermost; VMEM scratch carries
+(m, l, acc) across kv steps of one q block (TPU grids are sequential per
+core).  Block sizes must be multiples of the (16, 128) bf16 tile — the same
+alignment rule the paper derives for GPU tensor cores, with TPU constants
+(DESIGN.md §2).  Fully-masked kv blocks above the causal diagonal are skipped
+via pl.when (saving ~2x on causal prefill).
+
+This kernel is the §VI-C3 recommendation realized on TPU: it converts the
+naive score/AOV BMM pair (whose s^2 HBM traffic makes long-sequence training
+memory-bound — see EXPERIMENTS.md §Roofline baseline) into a compute-bound
+streaming kernel; the h-dependence collapses onto the roofline (paper Fig.12).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  kv_steps: int, block_q: int, block_kv: int, causal: bool,
+                  scale: float):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        q = q_ref[0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0].astype(jnp.float32)           # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)           # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                            (block_q, block_kv), 0)
+            kv_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                              (block_q, block_kv), 1)
+            s = jnp.where(kv_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        pl.when(ki * block_kv <= (qi + 1) * block_q - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(ki == kv_steps - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_kv: int = 128, scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (bh, sq, d); k, v: (bkv_h, skv, d) with bh % bkv_h == 0 (GQA).
+
+    Requires sq % block_q == 0 and skv % block_kv == 0 (ops.py pads).
+    """
+    bh, sq, d = q.shape
+    bkv, skv, dk = k.shape
+    assert d == dk and bh % bkv == 0
+    g = bh // bkv
+    assert sq % block_q == 0 and skv % block_kv == 0
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kv_steps = skv // block_kv
+    grid = (bh, sq // block_q, kv_steps)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, kv_steps=kv_steps, block_q=block_q,
+                          block_kv=block_kv, causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j, g=g: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+`flash_attention` takes model-layout tensors (b, s, heads, head_dim), folds
+batch x heads, pads seq to the block grid, dispatches to the Pallas kernel
+(TPU) or the jnp oracle (CPU fallback / use_pallas=False).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quantization import round_up
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _fold(x):
+    b, s, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+
+def _unfold(x, b, h):
+    bh, s, d = x.shape
+    return x.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret", "use_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True,
+                    use_pallas: bool = True):
+    """q: (b, sq, a, d); k, v: (b, skv, kv_heads, d).  Returns (b, sq, a, d)."""
+    b, sq, a, d = q.shape
+    _, skv, nkv, _ = k.shape
+    qf, kf, vf = _fold(q), _fold(k), _fold(v)
+    if not use_pallas:
+        return _unfold(attention_ref(qf, kf, vf, causal=causal), b, a)
+    sq_p = round_up(sq, block_q)
+    skv_p = round_up(skv, block_kv)
+    if sq_p != sq:
+        qf = jnp.pad(qf, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        # padded kv positions are masked out by the causal rule for decode-
+        # free use; for non-causal we mask via a -inf score on padded keys,
+        # implemented by zero-padding k and relying on softmax renorm error
+        # being sliced away only when causal guards it — so require causal
+        # or exact skv here.
+        assert causal, "non-causal flash requires skv % block_kv == 0"
+        kf = jnp.pad(kf, ((0, 0), (0, skv_p - skv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, skv_p - skv), (0, 0)))
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, block_q=block_q,
+                                 block_kv=block_kv, interpret=interpret)
+    return _unfold(out[:, :sq], b, a)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True, scale=None):
+    """q: (bh, sq, d); k, v: (bkv, skv, d); GQA via bh % bkv == 0."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    g = bh // bkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,65 @@
+"""Tile-aligned GEMM Pallas kernel — the paper's central object on TPU.
+
+Grid (m_blocks, n_blocks, k_blocks), k innermost; a VMEM f32 scratch
+accumulates across the k dimension (TPU grids execute sequentially per core,
+so the scratch carries between k steps of the same (i, j) tile).
+
+BlockSpec shapes ARE the co-design knobs: (block_m, block_k, block_n) must be
+multiples of the (sublane, lane) = (16, 128) bf16 tile for full MXU
+utilization — exactly the paper's tensor-core alignment rule with TPU
+constants.  The `ops.py` wrapper reports the padding waste for misaligned
+problem shapes via core.quantization.tile_utilization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, *,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                  out_dtype=None, interpret: bool = False) -> jax.Array:
+    """C = A @ B with explicit VMEM tiling.  Requires block-divisible shapes
+    (ops.matmul pads misaligned problems and slices the result — making the
+    tile-quantization cost explicit rather than implicit)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        "matmul_pallas requires padded shapes; use ops.matmul")
+    out_dtype = out_dtype or a.dtype
+    k_steps = k // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pl.ANY if False else _vmem((block_m, block_n))],
+        interpret=interpret,
+    )(a, b)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

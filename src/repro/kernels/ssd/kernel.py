@@ -1,0 +1,87 @@
+"""Mamba2 SSD intra-chunk Pallas kernel.
+
+Computes, for one chunk of length Q per (batch, head) grid cell:
+    Y_diag = ((C Bᵀ) ∘ L) · X        L[i,j] = exp(seg_i - seg_j), i >= j
+    S      = Bᵀ · (decay_state ∘ X)   (the chunk's contribution to the
+                                       inter-chunk state recurrence)
+where seg is the within-chunk cumulative sum of dt·A.
+
+This is the SSD analogue of the attention score/AOV BMM pair (DESIGN.md
+§Arch-applicability): the (Q, N) x (N, Q) and (Q, Q) x (Q, P) matmuls run on
+the MXU, with Q and N chosen as multiples of the 128-lane tile (the paper's
+alignment rule with SSD's shape knobs).  The inter-chunk recurrence stays in
+XLA (associative scan over nc chunks — latency-bound, not compute-bound).
+
+Grid: (batch * heads, num_chunks).  Everything for one chunk fits VMEM:
+Q=256, N=128, P=64 bf16 => ~0.4 MB working set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, seg_ref, o_ref, s_ref, *,
+                      chunk: int):
+    x = x_ref[0, 0].astype(jnp.float32)      # (Q, P)  x·dt pre-scaled
+    B = b_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)      # (Q, N)
+    seg = seg_ref[0, 0].astype(jnp.float32)  # (Q,)
+
+    # decay matrix with the mask inside the exponent (NaN-safe grads)
+    diff = seg[:, None] - seg[None, :]                     # (Q, Q)
+    iota_q = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.exp(jnp.where(iota_k <= iota_q, diff, NEG_INF))
+
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot_general(CB * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+    o_ref[0, 0, ...] = y.astype(o_ref.dtype)
+
+    # chunk state: S = sum_k B_k (decay_k x_k)^T   with decay = exp(seg_Q - seg_k)
+    decay = jnp.exp(seg[-1] - seg)                                 # (Q,)
+    xd = x * decay[:, None]
+    S = jax.lax.dot_general(B, xd, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (N, P)
+    s_ref[0, 0, ...] = S.astype(s_ref.dtype)
+
+
+def ssd_chunk_pallas(x_dt: jax.Array, B: jax.Array, C: jax.Array,
+                     seg: jax.Array, *, interpret: bool = False):
+    """Intra-chunk SSD for all (bh, chunks).
+
+    x_dt: (bh, nc, Q, P); B, C: (bh, nc, Q, N); seg: (bh, nc, Q).
+    Returns (Y_diag (bh, nc, Q, P), S (bh, nc, N, P)).
+    """
+    bh, nc, Q, P = x_dt.shape
+    N = B.shape[-1]
+    grid = (bh, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, chunk=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, Q, P), x_dt.dtype),
+            jax.ShapeDtypeStruct((bh, nc, N, P), x_dt.dtype),
+        ],
+        interpret=interpret,
+    )(
+        x_dt.reshape(bh, nc, Q, P),
+        B, C, seg,
+    )

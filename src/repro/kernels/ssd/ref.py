@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ssd_chunk_ref(x_dt, B, C, seg):
+    """x_dt: (bh, nc, Q, P); B, C: (bh, nc, Q, N); seg: (bh, nc, Q)."""
+    Q = x_dt.shape[2]
+    diff = seg[..., :, None] - seg[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask, diff, NEG_INF))
+    CB = jnp.einsum("gcqn,gckn->gcqk", C.astype(jnp.float32),
+                    B.astype(jnp.float32))
+    y = jnp.einsum("gcqk,gckp->gcqp", CB * L, x_dt.astype(jnp.float32))
+    decay = jnp.exp(seg[..., -1:] - seg)
+    S = jnp.einsum("gcqn,gcqp->gcnp", B.astype(jnp.float32),
+                   (x_dt * decay[..., None]).astype(jnp.float32))
+    return y.astype(x_dt.dtype), S.astype(x_dt.dtype)

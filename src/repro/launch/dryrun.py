@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract the roofline terms.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); 512 placeholder host devices back the 2x16x16 mesh.
+
+Per cell this driver:
+  1. builds the production mesh (16x16 or 2x16x16),
+  2. builds ShapeDtypeStruct stand-ins for params / optimizer / batch / caches,
+  3. jit-lowers train_step (train cells) or prefill/decode steps (serving
+     cells) with explicit in/out shardings,
+  4. .lower().compile() — any sharding mismatch / unsupported collective /
+     compile-OOM here is a bug in the system,
+  5. records memory_analysis(), cost_analysis(), and the HLO collective
+     byte census into a JSON row for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k [--multipod]
+  python -m repro.launch.dryrun --all [--multipod] --out results.jsonl
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import (MeshConfig, ModelConfig, ShapeConfig, SHAPES,
+                            TrainConfig)
+from ..configs.registry import get_config, list_archs
+from ..core import advisor, hlo_analysis, roofline
+from ..core.hardware import get_hardware
+from ..launch.input_specs import (cache_structs, input_specs, opt_structs,
+                                  param_structs)
+from ..launch.mesh import make_production_mesh, production_mesh_config
+from ..optim.adamw import OptState
+from ..parallel import sharding as sh
+from ..serving.serve_step import make_decode_step, make_prefill_step
+from ..train.train_step import make_train_step, num_microbatches
+
+ASSIGNED = [
+    "zamba2-2.7b", "qwen1.5-4b", "nemotron-4-340b", "internlm2-1.8b",
+    "command-r-plus-104b", "deepseek-v3-671b", "llama4-maverick-400b-a17b",
+    "internvl2-76b", "whisper-small", "mamba2-780m",
+]
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig):
+    """(runnable, reason-if-skipped) — skips documented in DESIGN.md §4."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full-attention arch: O(s^2) at 524k skipped per task spec"
+    return True, ""
+
+
+def _train_config(cfg: ModelConfig) -> TrainConfig:
+    big = cfg.param_count() > 60e9
+    return TrainConfig(optimizer="adamw8bit" if big else "adamw",
+                       remat="full", microbatch_per_device=1)
+
+
+def _fix_small_batch(spec_tree, gb: int, mesh):
+    """b < dp (long_500k b=1): strip the batch-axis sharding."""
+    dp_names = {"pod", "data"}
+
+    def fix(p):
+        if not isinstance(p, P):
+            return p
+        parts = []
+        for e in p:
+            if e in dp_names or (isinstance(e, tuple) and set(e) & dp_names):
+                parts.append(None)
+            else:
+                parts.append(e)
+        return P(*parts)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_specs(opt_struct: OptState, cfg, mesh, tc: TrainConfig):
+    if tc.optimizer == "adamw8bit":
+        # shape-preserving int8 state: codes take the parameter's spec,
+        # the per-row scale takes it minus the last axis (ZeRO-compatible —
+        # see optim/adamw.py docstring for the mis-sharding we measured)
+        def q_specs(quant_tree):
+            codes = jax.tree.map(lambda d: d["codes"], quant_tree,
+                                 is_leaf=lambda x: isinstance(x, dict)
+                                 and "codes" in x)
+            cspecs = sh.param_specs(codes, cfg, mesh)
+            return jax.tree.map(
+                lambda spec: {"codes": spec,
+                              "scale": P(*tuple(spec)[:-1], None)
+                              if len(spec) else P()},
+                cspecs, is_leaf=lambda x: isinstance(x, P))
+        m = q_specs(opt_struct.m)
+        v = q_specs(opt_struct.v)
+    else:
+        m = sh.param_specs(opt_struct.m, cfg, mesh)
+        v = sh.param_specs(opt_struct.v, cfg, mesh)
+    return OptState(P(), m, v)
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_patch: dict | None = None, tc_patch: dict | None = None):
+    """Build + lower one cell.  Returns (lowered, meta dict).
+
+    cfg_patch / tc_patch: dataclasses.replace overrides — the §Perf hillclimb
+    hook (e.g. {"attn_impl": "blocked"} or {"microbatch_per_device": 4}).
+    """
+    cfg = get_config(arch)
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_cfg = production_mesh_config(multi_pod=multi_pod)
+    sh.set_activation_context(("pod", "data") if multi_pod else ("data",),
+                              mesh=mesh)
+    warnings = [f"{f.rule}: {f.message}"
+                for f in advisor.check_alignment(cfg, tp=mesh_cfg.model,
+                                                 global_batch=shape.global_batch)
+                if f.severity != "ok"]
+    warnings += sh.validate_divisibility(cfg, mesh_cfg, shape.global_batch)
+
+    dp = mesh_cfg.dp
+    small_batch = shape.global_batch < dp
+
+    no_tp = bool(tc_patch.pop("no_tp", False)) if tc_patch else False
+    if no_tp:
+        # re-purpose the model axis as extra data parallelism (pure DP):
+        # weights replicate over `model`, batch shards over BOTH axes.
+        # Leaving the model axis idle would replicate compute 16x (measured
+        # — EXPERIMENTS.md §Perf whisper no_tp v1).
+        dp = mesh_cfg.num_devices
+        dp_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        sh.set_activation_context(dp_axes)
+        small_batch = shape.global_batch < dp
+
+    if shape.mode == "train":
+        tc = _train_config(cfg)
+        if tc_patch:
+            tc = dataclasses.replace(tc, **tc_patch)
+        n_micro = max(shape.global_batch // (dp * tc.microbatch_per_device), 1) \
+            if not small_batch else 1
+        pspecs = sh.param_specs(param_structs(cfg), cfg, mesh)
+        ostructs = opt_structs(cfg, tc)
+        ospecs = _opt_specs(ostructs, cfg, mesh, tc)
+        if no_tp:
+            pspecs = sh.strip_axis(pspecs, "model")
+            ospecs = OptState(ospecs.step, sh.strip_axis(ospecs.m, "model"),
+                              sh.strip_axis(ospecs.v, "model"))
+        bspecs = {k: v for k, v in sh.batch_specs(cfg, mesh).items()
+                  if k in input_specs(cfg, shape)}
+        if no_tp:
+            dp_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+            bspecs = jax.tree.map(
+                lambda p: P(dp_axes, *tuple(p)[1:]), bspecs,
+                is_leaf=lambda x: isinstance(x, P))
+        if small_batch:
+            bspecs = _fix_small_batch(bspecs, shape.global_batch, mesh)
+        step = make_train_step(cfg, tc, n_micro=n_micro, batch_spec=bspecs)
+        jitted = jax.jit(step,
+                         in_shardings=(_named(pspecs, mesh),
+                                       _named(ospecs, mesh),
+                                       _named(bspecs, mesh)),
+                         donate_argnums=(0, 1))
+        args = (param_structs(cfg), ostructs, input_specs(cfg, shape))
+        with mesh:
+            lowered = jitted.lower(*args)
+        flops_mult = 3.0  # fwd + bwd
+        meta = {"n_micro": n_micro, "optimizer": tc.optimizer}
+
+    elif shape.mode == "prefill":
+        pstructs = param_structs(cfg, dtype=jnp.bfloat16)
+        pspecs = sh.param_specs(pstructs, cfg, mesh)
+        bspecs = {k: v for k, v in sh.batch_specs(cfg, mesh).items()
+                  if k in input_specs(cfg, shape)}
+        cspecs = sh.cache_specs(cfg, mesh)
+        dpax = ("pod", "data") if multi_pod else ("data",)
+        out_specs = (P(dpax, "model"), cspecs)
+        if small_batch:
+            bspecs, out_specs = (_fix_small_batch(t, shape.global_batch, mesh)
+                                 for t in (bspecs, out_specs))
+        step = make_prefill_step(cfg, shape.seq_len)
+        jitted = jax.jit(step,
+                         in_shardings=(_named(pspecs, mesh), _named(bspecs, mesh)),
+                         out_shardings=_named(out_specs, mesh))
+        with mesh:
+            lowered = jitted.lower(pstructs, input_specs(cfg, shape))
+        flops_mult = 1.0
+        meta = {}
+
+    else:  # decode
+        serve_tp_only = bool(tc_patch.pop("serve_tp_only", False)) if tc_patch else False
+        pstructs = param_structs(cfg, dtype=jnp.bfloat16)
+        pspecs = sh.param_specs(pstructs, cfg, mesh)
+        if serve_tp_only:
+            # inference has no optimizer state: replicate params over `data`
+            # instead of FSDP-sharding them (which re-gathers every token)
+            pspecs = sh.strip_axis(pspecs, "data")
+        ins = input_specs(cfg, shape)
+        cspecs = sh.cache_specs(cfg, mesh)
+        dpax = ("pod", "data") if multi_pod else ("data",)
+        tok_spec = P(dpax, None)
+        out_specs = (P(dpax, "model"), cspecs)
+        if small_batch:
+            tok_spec, cspecs, out_specs = (
+                _fix_small_batch(t, shape.global_batch, mesh)
+                for t in (tok_spec, cspecs, out_specs))
+        base_decode = make_decode_step(cfg)
+        if cfg.is_encoder_decoder:
+            enc_struct = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            enc_spec = _fix_small_batch(P(dpax, None, None),
+                                        shape.global_batch, mesh) \
+                if small_batch else P(dpax, None, None)
+            step = lambda p, t, c, i, e: base_decode(p, t, c, i, enc_out=e)
+            jitted = jax.jit(step,
+                             in_shardings=(_named(pspecs, mesh), _named(tok_spec, mesh),
+                                           _named(cspecs, mesh), None,
+                                           _named(enc_spec, mesh)),
+                             out_shardings=_named(out_specs, mesh),
+                             donate_argnums=(2,))
+            with mesh:
+                lowered = jitted.lower(pstructs, ins["token"], ins["caches"],
+                                       ins["index"], enc_struct)
+        else:
+            jitted = jax.jit(base_decode,
+                             in_shardings=(_named(pspecs, mesh), _named(tok_spec, mesh),
+                                           _named(cspecs, mesh), None),
+                             out_shardings=_named(out_specs, mesh),
+                             donate_argnums=(2,))
+            with mesh:
+                lowered = jitted.lower(pstructs, ins["token"], ins["caches"],
+                                       ins["index"])
+        flops_mult = 1.0
+        meta = {}
+
+    meta.update({"warnings": warnings, "flops_mult": flops_mult,
+                 "num_chips": mesh_cfg.num_devices})
+    return lowered, meta
+
+
+def model_flops_total(cfg: ModelConfig, shape: ShapeConfig, flops_mult: float) -> float:
+    """Useful FLOPs per step: 6·N_active·D (train) / 2·N_active·D (serve)."""
+    n = cfg.active_param_count()
+    if shape.mode == "decode":
+        d = shape.global_batch  # one token per sequence
+    else:
+        d = shape.global_batch * shape.seq_len
+    return (2.0 * flops_mult) * n * d
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False, cfg_patch: dict | None = None,
+             tc_patch: dict | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if tag:
+        row["tag"] = tag
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        row.update({"status": "skipped", "reason": reason})
+        return row
+    try:
+        t0 = time.time()
+        lowered, meta = lower_cell(arch, shape_name, multi_pod,
+                                   cfg_patch=cfg_patch, tc_patch=tc_patch)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        try:
+            mem = compiled.memory_analysis()
+            mem_row = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception:
+            mem_row = {}
+        hlo = compiled.as_text()
+        counts = hlo_analysis.analyze_hlo(hlo)
+        bytes_per_dev = None
+        if mem_row.get("argument_bytes"):
+            bytes_per_dev = (mem_row.get("argument_bytes", 0) or 0) + \
+                            (mem_row.get("temp_bytes", 0) or 0)
+        coll = dict(counts.coll)
+        coll["total"] = counts.coll_total
+        rep = roofline.build_report(
+            arch, shape_name, mesh_name, meta["num_chips"],
+            counts.flops, counts.bytes, coll,
+            model_flops_total(cfg, shape, meta["flops_mult"]),
+            hw=get_hardware("tpu_v5e"), bytes_per_device=bytes_per_dev)
+        row.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "cost_analysis_flops_raw": float(cost.get("flops", 0.0)),
+            "loops": counts.loops,
+            "s2_bytes": counts.s2_bytes,
+            "hlo_flops": rep.hlo_flops,
+            "hlo_bytes": rep.hlo_bytes,
+            "coll_bytes": rep.coll_bytes,
+            "coll_breakdown": rep.coll_breakdown,
+            "compute_s": rep.compute_s,
+            "memory_s": rep.memory_s,
+            "collective_s": rep.collective_s,
+            "dominant": rep.dominant,
+            "model_flops_per_chip": rep.model_flops,
+            "useful_ratio": rep.useful_ratio,
+            "roofline_fraction": rep.roofline_fraction,
+            "mem": mem_row,
+            "warnings": meta.get("warnings", []),
+            "n_micro": meta.get("n_micro"),
+        })
+        if keep_hlo:
+            row["hlo_len"] = len(hlo)
+        del hlo, compiled, lowered
+    except Exception as e:
+        row.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SHAPE_ORDER + [None])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = SHAPE_ORDER if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_err = n_skip = 0
+    for a, s, mp in cells:
+        row = run_cell(a, s, mp)
+        line = json.dumps(row)
+        if out_f:
+            out_f.write(line + "\n")
+            out_f.flush()
+        status = row["status"]
+        n_ok += status == "ok"
+        n_err += status == "error"
+        n_skip += status == "skipped"
+        brief = {k: row.get(k) for k in
+                 ("arch", "shape", "mesh", "status", "dominant",
+                  "roofline_fraction", "compile_s", "error")}
+        print(json.dumps(brief), flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+    if out_f:
+        out_f.close()
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

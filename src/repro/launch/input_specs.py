@@ -1,0 +1,49 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  This is what the dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MeshConfig, ModelConfig, ShapeConfig, TrainConfig
+from ..data.pipeline import batch_shapes
+from ..models import init_lm, init_caches
+from ..models.layers import compute_dtype
+from ..optim.adamw import init_opt
+
+
+def param_structs(cfg: ModelConfig, dtype=None) -> Any:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(functools.partial(init_lm, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), shapes)
+    return shapes
+
+
+def opt_structs(cfg: ModelConfig, tc: TrainConfig) -> Any:
+    params = param_structs(cfg)
+    return jax.eval_shape(functools.partial(init_opt, tc=tc), params)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, s_max: int) -> Any:
+    return jax.eval_shape(
+        lambda: init_caches(cfg, batch, s_max, compute_dtype(cfg.dtype)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one cell: train/prefill get the full batch; decode
+    gets (token, caches, index)."""
+    if shape.mode in ("train", "prefill"):
+        return batch_shapes(cfg, shape)
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "caches": cache_structs(cfg, b, shape.seq_len),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,6 @@
+"""Pure-JAX model zoo: dense GQA, MLA, MoE, SSD/Mamba2, hybrid, enc-dec, VLM."""
+from .lm import apply_lm, init_lm, init_caches, lm_loss, softmax_xent, apply_encoder
+from .blocks import stack_plan
+
+__all__ = ["apply_lm", "init_lm", "init_caches", "lm_loss", "softmax_xent",
+           "apply_encoder", "stack_plan"]

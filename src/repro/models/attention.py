@@ -1,0 +1,202 @@
+"""Attention variants: GQA/MHA (+QKV bias) and DeepSeek-V3 MLA.
+
+Shapes follow the paper's Table II GEMM decomposition exactly:
+  qkv:    (b*s, h) x (h, (a+2kv)*hd)
+  score:  b*a BMMs of (s, hd) x (hd, s_kv)
+  aov:    b*a BMMs of (s, s_kv) x (s_kv, hd)
+  out:    (b*s, a*hd) x (a*hd, h)
+
+Both a fused-reference path (jnp einsum, used on CPU and in the dry-run) and
+the Pallas flash-attention path (TPU target) are provided; dispatch is by
+`use_flash`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rotary, dense_init
+
+NEG_INF = -1e30
+
+
+def init_gqa(key, cfg: ModelConfig):
+    h, hd = cfg.d_model, cfg.head_dim
+    a, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], h, a * hd),
+        "wk": dense_init(ks[1], h, kv * hd),
+        "wv": dense_init(ks[2], h, kv * hd),
+        "wo": dense_init(ks[3], a * hd, h, scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((a * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    return p
+
+
+def _sdpa(q, k, v, causal: bool, q_pos=None, kv_len=None,
+          seq_sharded: bool = False):
+    """Reference scaled-dot-product attention.
+
+    q: (b, sq, a, hd); k, v: (b, skv, kv, hd).  GQA: a % kv == 0.
+    q_pos: (sq,) absolute positions of the queries (for causal masking
+    against a cache); kv_len: number of valid cache entries (scalar).
+
+    seq_sharded (decode): anchors K/V and the score matrix sequence-sharded
+    on the model axis — the softmax then reduces over a sharded dim, which
+    XLA lowers to partial max/sum + tiny all-reduces (distributed
+    flash-decode) instead of gathering the 32k-deep cache per layer.
+    """
+    from ..parallel.sharding import constrain
+    b, sq, a, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = a // nkv
+    if seq_sharded:
+        k = constrain(k, "bskh")
+        v = constrain(v, "bskh")
+    q = q.reshape(b, sq, nkv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    if seq_sharded:
+        scores = constrain(scores, "bkgqs")
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if causal:
+        if q_pos is None:
+            q_pos = jnp.arange(sq)
+        kv_pos = jnp.arange(skv)
+        mask = kv_pos[None, :] <= q_pos[:, None]  # (sq, skv)
+        if kv_len is not None:
+            mask = mask & (kv_pos[None, :] < kv_len)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    elif kv_len is not None:
+        mask = jnp.arange(skv)[None, :] < kv_len
+        scores = jnp.where(mask[None, None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, sq, a, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
+              cache=None, cache_index=None, kv_input=None):
+    """x: (b, s, h).  Returns (out, new_cache).
+
+    cache: dict(k=(b, s_max, kv, hd), v=...) or None.
+    cache_index: scalar write offset for decode.
+    kv_input: if set, keys/values come from this tensor (cross-attention).
+    """
+    b, s, h = x.shape
+    a, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_input is None else kv_input
+    q = x @ p["wq"].astype(x.dtype)
+    k = src @ p["wk"].astype(x.dtype)
+    v = src @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, a, hd)
+    k = k.reshape(b, src.shape[1], nkv, hd)
+    v = v.reshape(b, src.shape[1], nkv, hd)
+    if cfg.pos_emb == "rotary" and kv_input is None:
+        q = apply_rotary(q, positions, cfg.rope_theta)
+        k = apply_rotary(k, positions, cfg.rope_theta)
+    new_cache = None
+    kv_len = None
+    if cache is not None and kv_input is None:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": k, "v": v}
+        kv_len = cache_index + s
+    q_pos = positions[0] if positions.ndim > 1 else positions
+    is_decode = cache is not None and s == 1
+    if cfg.attn_impl == "blocked" and not is_decode:
+        from .blocked_attention import blocked_sdpa
+        out = blocked_sdpa(q, k.astype(q.dtype), v.astype(q.dtype),
+                           causal=causal and kv_input is None,
+                           q_pos=q_pos, kv_len=kv_len,
+                           block_kv=cfg.attn_block_kv)
+    else:
+        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype),
+                    causal=causal and kv_input is None,
+                    q_pos=q_pos, kv_len=kv_len, seq_sharded=is_decode)
+    out = out.reshape(b, s, a * hd) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+# --- DeepSeek-V3 Multi-head Latent Attention ------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    h = cfg.d_model
+    a = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_down": dense_init(ks[0], h, qr),
+        "wq_up": dense_init(ks[1], qr, a * (nope + rope)),
+        "wkv_down": dense_init(ks[2], h, kvr + rope),
+        "wk_up": dense_init(ks[3], kvr, a * nope),
+        "wv_up": dense_init(ks[4], kvr, a * vd),
+        "wo": dense_init(ks[5], a * vd, h, scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def apply_mla(p, x, cfg: ModelConfig, *, positions, cache=None, cache_index=None):
+    """MLA with a latent-KV cache.  cache: dict(latent=(b, s_max, kvr+rope)).
+
+    Train/prefill: decompressed path (naive).  The latent (c_kv ++ k_rope) is
+    what gets cached; decode recomputes k/v from the cached latent (the
+    weight-absorbed schedule is an optimization we model in core/, the
+    computation here is mathematically identical).
+    """
+    b, s, h = x.shape
+    a = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q = (x @ p["wq_down"].astype(x.dtype)) @ p["wq_up"].astype(x.dtype)
+    q = q.reshape(b, s, a, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rotary(q_rope, positions, cfg.rope_theta)
+
+    latent = x @ p["wkv_down"].astype(x.dtype)  # (b, s, kvr+rope)
+    c_kv, k_rope_flat = latent[..., :kvr], latent[..., kvr:]
+    k_rope = apply_rotary(k_rope_flat[..., None, :], positions, cfg.rope_theta)
+
+    kv_len = None
+    new_cache = None
+    if cache is not None:
+        lat_all = jnp.concatenate([c_kv, k_rope[..., 0, :]], axis=-1)
+        stored = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], lat_all.astype(cache["latent"].dtype), cache_index, axis=1)
+        new_cache = {"latent": stored}
+        c_kv = stored[..., :kvr].astype(x.dtype)
+        k_rope = stored[..., None, kvr:].astype(x.dtype)
+        kv_len = cache_index + s
+
+    skv = c_kv.shape[1]
+    k_nope = (c_kv @ p["wk_up"].astype(x.dtype)).reshape(b, skv, a, nope)
+    v = (c_kv @ p["wv_up"].astype(x.dtype)).reshape(b, skv, a, vd)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, skv, a, rope))], axis=-1)
+    out = _sdpa(q_full, k_full, v, causal=True,
+                q_pos=positions[0] if positions.ndim > 1 else positions,
+                kv_len=kv_len,
+                seq_sharded=(cache is not None and s == 1))
+    out = out.reshape(b, s, a * vd) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+def init_attention(key, cfg: ModelConfig):
+    return init_mla(key, cfg) if cfg.attn_type == "mla" else init_gqa(key, cfg)
+
+
+def apply_attention(p, x, cfg: ModelConfig, **kw):
+    if cfg.attn_type == "mla":
+        kw.pop("kv_input", None)
+        kw.pop("causal", None)
+        return apply_mla(p, x, cfg, **kw)
+    return apply_gqa(p, x, cfg, **kw)

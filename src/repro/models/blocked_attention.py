@@ -1,0 +1,72 @@
+"""Blocked online-softmax attention in pure XLA (lax.scan over KV blocks).
+
+This is the lowering twin of kernels/flash_attention: identical algorithm
+(FlashAttention-2 streaming softmax), expressed as jnp + lax.scan so it
+lowers on any backend and differentiates.  On a TPU deployment the Pallas
+kernel replaces it 1:1; for the dry-run roofline it is what converts naive
+attention's O(s^2) HBM traffic into O(s·block) — the §VI-C3 hillclimb.
+
+Selected via ModelConfig.attn_impl == "blocked" ("naive" = the paper's
+Table II score/AOV BMM decomposition, the faithful baseline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def blocked_sdpa(q, k, v, *, causal: bool, q_pos=None, kv_len=None,
+                 block_kv: int = 1024):
+    """q: (b, sq, a, hd); k, v: (b, skv, kv, hd); GQA a % kv == 0.
+
+    Returns (b, sq, a, v_hd).  Same contract as models.attention._sdpa.
+    """
+    b, sq, a, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    g = a // nkv
+    blk = min(block_kv, skv)
+    if skv % blk:
+        pad = blk - skv % blk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        skv_p = skv + pad
+    else:
+        skv_p = skv
+    nblk = skv_p // blk
+
+    if q_pos is None:
+        q_pos = jnp.arange(sq)
+    limit = jnp.asarray(skv if kv_len is None else kv_len, jnp.int32)
+
+    qg = (q.reshape(b, sq, nkv, g, hd) / jnp.sqrt(hd).astype(q.dtype))
+    kb = k.reshape(b, nblk, blk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, blk, nkv, vd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, start = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kc).astype(jnp.float32)
+        pos = start + jnp.arange(blk)
+        valid = pos[None, :] < limit
+        if causal:
+            valid = valid & (pos[None, :] <= q_pos[:, None])
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, nkv, g, sq, vd), q.dtype)
+    starts = jnp.arange(nblk) * blk
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, starts))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, a, vd)

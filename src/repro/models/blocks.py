@@ -1,0 +1,258 @@
+"""Transformer block assembly and scanned layer stacks.
+
+A model is a list of *segments*; each segment is `n` structurally identical
+layers whose parameters are stacked on a leading axis and executed with
+`jax.lax.scan` (fast compiles + small HLO even for 96-layer models, and the
+natural form for per-layer FSDP gathering under SPMD).
+
+Segment kinds:
+  dense        — attn + MLP                       (qwen, nemotron, internlm2, ...)
+  moe          — attn + MoE                       (deepseek-v3 layers 3..61)
+  pair         — [moe, dense] superblock          (llama4: MoE every 2nd layer)
+  ssm          — Mamba2 block only                (mamba2-780m)
+  hybrid_super — `k` (ssm+MLP) layers + one SHARED attention block
+                 (zamba2: shared weights live outside the scan)
+Supports sequential and parallel-layers (§VI-C1) residual forms.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import apply_attention, init_attention
+from .layers import norm_apply, norm_init
+from .mlp import apply_mlp, init_mlp
+from .moe import apply_moe, init_moe
+from .ssm import apply_ssm, decode_ssm, init_ssm, init_ssm_cache
+
+
+# --- plan ---------------------------------------------------------------------------
+
+def stack_plan(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return [("ssm", L)]
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every or L
+        assert L % k == 0, "hybrid: L must divide hybrid_attn_every"
+        return [("hybrid_super", L // k)]
+    if cfg.num_experts:
+        if cfg.moe_every == 1:
+            fd = cfg.first_dense_layers
+            plan: List[Tuple[str, int]] = []
+            if fd:
+                plan.append(("dense", fd))
+            plan.append(("moe", L - fd))
+            return plan
+        assert cfg.moe_every == 2 and cfg.first_dense_layers == 0
+        return [("pair", L // 2)]
+    return [("dense", L)]
+
+
+# --- per-kind init -------------------------------------------------------------------
+
+def _init_one(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 8)
+    if kind == "dense":
+        return {"norm1": norm_init(cfg.d_model, cfg.norm_type),
+                "attn": init_attention(ks[0], cfg),
+                "norm2": norm_init(cfg.d_model, cfg.norm_type),
+                "mlp": init_mlp(ks[1], cfg)}
+    if kind == "moe":
+        return {"norm1": norm_init(cfg.d_model, cfg.norm_type),
+                "attn": init_attention(ks[0], cfg),
+                "norm2": norm_init(cfg.d_model, cfg.norm_type),
+                "moe": init_moe(ks[1], cfg)}
+    if kind == "pair":
+        return {"moe_blk": _init_one(ks[0], cfg, "moe"),
+                "dense_blk": _init_one(ks[1], cfg, "dense")}
+    if kind == "ssm":
+        return {"norm1": norm_init(cfg.d_model, cfg.norm_type),
+                "ssm": init_ssm(ks[0], cfg)}
+    if kind == "hybrid_super":
+        k = cfg.hybrid_attn_every
+        sub = jax.vmap(lambda kk: {
+            "norm1": norm_init(cfg.d_model, cfg.norm_type),
+            "ssm": init_ssm(kk, cfg),
+        })(jax.random.split(ks[0], k))
+        return {"layers": sub}
+    raise ValueError(kind)
+
+
+def init_segment(key, cfg: ModelConfig, kind: str, n: int):
+    return jax.vmap(lambda k: _init_one(k, cfg, kind))(jax.random.split(key, n))
+
+
+def init_shared(key, cfg: ModelConfig):
+    """Zamba2 shared attention+MLP block (weights tied across applications)."""
+    if cfg.family != "hybrid":
+        return None
+    k1, k2 = jax.random.split(key)
+    return {"norm": norm_init(cfg.d_model, cfg.norm_type),
+            "attn": init_attention(k1, cfg),
+            "norm2": norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": init_mlp(k2, cfg)}
+
+
+# --- caches --------------------------------------------------------------------------
+
+def _kv_cache_shape(cfg: ModelConfig, batch: int, s_max: int):
+    if cfg.attn_type == "mla":
+        return {"latent": (batch, s_max, cfg.kv_lora_rank + cfg.qk_rope_dim)}
+    return {"k": (batch, s_max, cfg.num_kv_heads, cfg.head_dim),
+            "v": (batch, s_max, cfg.num_kv_heads, cfg.head_dim)}
+
+
+def init_cache_segment(cfg: ModelConfig, kind: str, n: int, batch: int,
+                       s_max: int, dtype=jnp.bfloat16):
+    """Cache pytree for one segment (leading dim n, scanned with the layers)."""
+    def kv():
+        return {k: jnp.zeros((n,) + shp, dtype)
+                for k, shp in _kv_cache_shape(cfg, batch, s_max).items()}
+
+    if kind in ("dense", "moe"):
+        return kv()
+    if kind == "pair":
+        return {"moe_blk": kv(), "dense_blk": kv()}
+    if kind == "ssm":
+        c = init_ssm_cache(cfg, batch, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), c)
+    if kind == "hybrid_super":
+        c = init_ssm_cache(cfg, batch, dtype)
+        ssm = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n, cfg.hybrid_attn_every) + x.shape), c)
+        return {"ssm": ssm, "shared_attn": kv()}
+    raise ValueError(kind)
+
+
+# --- per-kind apply ------------------------------------------------------------------
+
+def _apply_attn_block(p, x, cfg, positions, cache, cache_index):
+    h, new_cache = apply_attention(
+        p["attn"], norm_apply(p["norm1"], x, cfg.norm_type), cfg,
+        positions=positions, cache=cache, cache_index=cache_index)
+    return h, new_cache
+
+
+def _apply_core(p, x, cfg: ModelConfig, kind: str, *, positions,
+                cache=None, cache_index=None, shared=None, decode=False):
+    """One layer.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe"):
+        if cfg.seq_parallel and x.shape[1] > 1:
+            from ..parallel.sharding import constrain
+            x = constrain(x, "btd_sp")
+        attn_out, new_cache = _apply_attn_block(p, x, cfg, positions, cache, cache_index)
+        if cfg.parallel_layers:
+            # y = x + Attn(N(x)) + MLP(N(x))   (§VI-C1; same first norm)
+            mix_in = norm_apply(p["norm1"], x, cfg.norm_type)
+        else:
+            x = x + attn_out
+            mix_in = norm_apply(p["norm2"], x, cfg.norm_type)
+        if kind == "moe":
+            if cfg.moe_dispatch == "shard_map":
+                from .moe_shardmap import apply_moe_shardmap
+                mix_out, aux = apply_moe_shardmap(p["moe"], mix_in, cfg)
+            else:
+                mix_out, aux = apply_moe(p["moe"], mix_in, cfg)
+        else:
+            mix_out = apply_mlp(p["mlp"], mix_in, cfg)
+        x = x + mix_out + (attn_out if cfg.parallel_layers else 0)
+        return x, new_cache, aux
+
+    if kind == "pair":
+        x, c1, a1 = _apply_core(p["moe_blk"], x, cfg, "moe", positions=positions,
+                                cache=None if cache is None else cache["moe_blk"],
+                                cache_index=cache_index, decode=decode)
+        x, c2, a2 = _apply_core(p["dense_blk"], x, cfg, "dense", positions=positions,
+                                cache=None if cache is None else cache["dense_blk"],
+                                cache_index=cache_index, decode=decode)
+        nc = None if cache is None else {"moe_blk": c1, "dense_blk": c2}
+        return x, nc, a1 + a2
+
+    if kind == "ssm":
+        xin = norm_apply(p["norm1"], x, cfg.norm_type)
+        if decode:
+            y, new_c = decode_ssm(p["ssm"], xin, cfg, cache)
+        else:
+            y, (st, tails) = apply_ssm(p["ssm"], xin, cfg,
+                                       state=None if cache is None else cache["state"])
+            new_c = None if cache is None else jax.tree.map(
+                lambda old, new: new.astype(old.dtype),
+                cache, {"state": st, **tails})
+        return x + y, new_c, aux
+
+    if kind == "hybrid_super":
+        k = cfg.hybrid_attn_every
+        new_ssm = [] if cache is not None else None
+        for i in range(k):
+            pi = jax.tree.map(lambda t: t[i], p["layers"])
+            ci = None if cache is None else jax.tree.map(lambda t: t[i], cache["ssm"])
+            xin = norm_apply(pi["norm1"], x, cfg.norm_type)
+            if decode:
+                y, nc = decode_ssm(pi["ssm"], xin, cfg, ci)
+            else:
+                y, (st, tails) = apply_ssm(pi["ssm"], xin, cfg,
+                                           state=None if ci is None else ci["state"])
+                nc = None if ci is None else jax.tree.map(
+                    lambda old, new: new.astype(old.dtype),
+                    ci, {"state": st, **tails})
+            x = x + y
+            if cache is not None:
+                new_ssm.append(nc)
+        # shared attention+MLP block (weights tied across all applications)
+        sc = None if cache is None else cache["shared_attn"]
+        attn_out, new_kv = apply_attention(
+            shared["attn"], norm_apply(shared["norm"], x, cfg.norm_type), cfg,
+            positions=positions, cache=sc, cache_index=cache_index)
+        x = x + attn_out
+        x = x + apply_mlp(shared["mlp"],
+                          norm_apply(shared["norm2"], x, cfg.norm_type), cfg)
+        if cache is None:
+            return x, None, aux
+        stacked_ssm = jax.tree.map(lambda *ts: jnp.stack(ts), *new_ssm)
+        return x, {"ssm": stacked_ssm, "shared_attn": new_kv}, aux
+
+    raise ValueError(kind)
+
+
+# --- scanned stack -------------------------------------------------------------------
+
+def apply_stack(segments_params, cfg: ModelConfig, x, *, positions,
+                caches=None, cache_index=None, decode=False, shared=None,
+                remat: str = "none"):
+    """Run all segments.  segments_params: list of (kind, stacked_params).
+
+    caches: list aligned with segments (or None).
+    Returns (x, new_caches, total_aux).
+    """
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches = [] if caches is not None else None
+
+    for si, (kind, sp) in enumerate(segments_params):
+        seg_cache = None if caches is None else caches[si]
+
+        def body(carry, xs, _kind=kind):
+            h, aux = carry
+            p_l, c_l = xs
+            h, nc, a = _apply_core(p_l, h, cfg, _kind, positions=positions,
+                                   cache=c_l, cache_index=cache_index,
+                                   shared=shared, decode=decode)
+            return (h, aux + a), nc
+
+        if remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        xs = (sp, seg_cache)
+        (x, total_aux), seg_new_cache = jax.lax.scan(body, (x, total_aux), xs)
+        if new_caches is not None:
+            new_caches.append(seg_new_cache)
+    return x, new_caches, total_aux

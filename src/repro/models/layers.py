@@ -1,0 +1,81 @@
+"""Basic layers: norms, embeddings, rotary, initializers.
+
+Pure JAX (no flax): every layer is an `init(key, ...) -> params` function plus
+an `apply(params, x, ...) -> y` function over dict pytrees.  Parameters are
+stored in float32 (master copy); compute runs in the config dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def compute_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --- initializers -------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, fan_out: int, scale: float = 1.0):
+    std = scale / np.sqrt(fan_in)
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * std
+
+
+def embed_init(key, vocab: int, dim: int):
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+
+
+# --- norms --------------------------------------------------------------------------
+
+def norm_init(dim: int, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x, kind: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --- rotary embeddings (§VI-C2: recommended best practice) ---------------------------
+
+def rotary_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    return jnp.asarray(inv)
+
+
+def apply_rotary(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    inv = rotary_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., s, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]  # broadcast over heads
+    cos = cos[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- activations ---------------------------------------------------------------------
+
+def activation(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu2":  # nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)

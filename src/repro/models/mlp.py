@@ -1,0 +1,40 @@
+"""MLP variants: standard 2-matrix (gelu / squared-ReLU) and SwiGLU (3-matrix).
+
+The SwiGLU d_ff choice is the subject of paper §VII-B: the 8h/3 heuristic
+breaks GEMM alignment; configs should pick an aligned nearby d_ff (the
+advisor's `_candidate_dff` search).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import activation, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    h = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], h, f),
+            "w_up": dense_init(ks[1], h, f),
+            "w_down": dense_init(ks[2], f, h, scale=out_scale),
+        }
+    return {
+        "w_up": dense_init(ks[0], h, f),
+        "w_down": dense_init(ks[1], f, h, scale=out_scale),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+        u = x @ p["w_up"].astype(x.dtype)
+        return (g * u) @ p["w_down"].astype(x.dtype)
+    act = activation("relu2" if cfg.mlp_type == "relu2" else "gelu")
+    u = act(x @ p["w_up"].astype(x.dtype))
+    return u @ p["w_down"].astype(x.dtype)

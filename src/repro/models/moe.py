@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded sort-based
+dispatch, EP-shardable batched-expert GEMMs, shared experts.
+
+The expert FFN computation is `num_experts` batched GEMMs of size
+(capacity, h) x (h, moe_d_ff) — exactly the `moe_expert_*` entries that
+core/transformer_gemms.py enumerates, so the paper's alignment rules apply to
+(capacity, h, moe_d_ff) and the advisor checks experts % EP == 0.
+
+Dispatch is sort-based (GShard-style but without the T×E×C one-hot): tokens
+are sorted by assigned expert, positioned within their expert's capacity
+window, and scattered into an (E, C, h) buffer.  Under EP sharding of the
+leading expert axis XLA lowers the scatter/gather to all-to-all traffic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init
+from .mlp import apply_mlp, init_mlp
+
+
+def init_moe(key, cfg: ModelConfig):
+    h, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    p = {
+        "router": dense_init(ks[0], h, e, scale=0.5),
+        "w_up": jax.vmap(lambda k: dense_init(k, h, f))(jax.random.split(ks[1], e)),
+        "w_down": jax.vmap(lambda k: dense_init(k, f, h, scale=out_scale))(
+            jax.random.split(ks[2], e)),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = jax.vmap(lambda k: dense_init(k, h, f))(jax.random.split(ks[3], e))
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.moe_capacity_factor / cfg.num_experts)
+    return max(cap - cap % -8, 8)  # round up to 8 (sublane alignment)
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (b, s, h) -> (y, aux_loss)."""
+    b, s, h = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(b * s, h)
+    t = b * s
+    cap = _capacity(t, cfg)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (t, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    frac_tokens = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    flat_expert = idx.reshape(-1)  # (t*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position of each entry within its expert's token run
+    seg_start = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos = jnp.arange(t * k) - seg_start[se]
+    keep = pos < cap
+    # scatter into (e, cap, h); dropped tokens go to a trash row
+    from ..parallel.sharding import constrain
+    buf = jnp.zeros((e * cap, h), x.dtype)
+    dst = jnp.where(keep, se * cap + pos, e * cap - 1)
+    buf = buf.at[dst].add(jnp.where(keep[:, None], xt[st], 0))
+    buf = constrain(buf, "eh").reshape(e, cap, h)
+
+    # ---- batched expert GEMMs (E x (cap,h)x(h,f)) ----------------------------
+    if cfg.mlp_type == "swiglu":
+        g = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, p["w_gate"].astype(x.dtype)))
+        u = jnp.einsum("ech,ehf->ecf", buf, p["w_up"].astype(x.dtype))
+        hdn = g * u
+    else:
+        hdn = jax.nn.gelu(jnp.einsum("ech,ehf->ecf", buf, p["w_up"].astype(x.dtype)))
+    out_buf = jnp.einsum("ecf,efh->ech", hdn, p["w_down"].astype(x.dtype))
+    out_buf = out_buf.reshape(e * cap, h)
+
+    # ---- gather back + combine ----------------------------------------------
+    # anchor the token-major layout: without it the SPMD partitioner
+    # replicates the (t*k, h) gather output on every chip (measured 60 GB x
+    # 58 layers x n_micro on deepseek-v3 — EXPERIMENTS.md §Perf)
+    out_buf = constrain(out_buf, "eh")
+    picked = jnp.where(keep[:, None], out_buf[dst], 0)
+    picked = constrain(picked, "td")
+    y = jnp.zeros((t, h), x.dtype).at[st].add(picked * sg[:, None].astype(x.dtype))
+    y = constrain(y, "td")
+
+    if cfg.num_shared_experts:
+        y = y + apply_mlp(p["shared"], xt, cfg)
+    return y.reshape(b, s, h), aux

@@ -1,0 +1,220 @@
+"""Mamba2 SSD (state-space duality) block — chunked dual form + decode step.
+
+The chunked dual form computes, per chunk of length Q:
+  intra-chunk:  Y_diag = ((C Bᵀ) ∘ L) · (x·dt)          — attention-like BMMs
+  chunk states: S_c    = (B·decay)ᵀ (x·dt)               — (N,Q)x(Q,P) BMMs
+  inter-chunk:  recurrence over chunk states (associative scan, O(nc log nc))
+  state read:   Y_off  = C · S_prev · decay              — (Q,N)x(N,P) BMMs
+
+These are exactly the `ssd_*` GEMMs enumerated in core/transformer_gemms.py;
+the paper's BMM sizing rules apply with (Q, P, N) in place of (s, h/a): Q and
+N should be multiples of the 128 lane width, P of the sublane tile.
+
+TP note: the z/x/B/C/dt projections are stored as SEPARATE matrices (not the
+fused in_proj of the reference CUDA implementation) so each shards cleanly on
+the `model` axis — the fused layout's split points fall mid-shard and would
+force XLA to reshard (DESIGN.md §Hardware-adaptation).  Same math, same total
+GEMM volume (XLA fuses the small projections back together per tile).
+
+Decode runs the constant-memory recurrent step on an (b, nh, P, N) state —
+this is what makes the long_500k cell runnable for mamba2/zamba2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, norm_apply, norm_init
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_d_inner
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    nh = di // P
+    g = cfg.ssm_ngroups
+    return di, N, P, nh, g
+
+
+def init_ssm(key, cfg: ModelConfig):
+    h = cfg.d_model
+    di, N, P, nh, g = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": dense_init(ks[0], h, di),
+        "in_x": dense_init(ks[1], h, di),
+        "in_B": dense_init(ks[2], h, g * N),
+        "in_C": dense_init(ks[3], h, g * N),
+        "in_dt": dense_init(ks[4], h, nh),
+        "conv_x": jax.random.normal(ks[5], (cfg.conv_width, di), jnp.float32) * 0.1,
+        "conv_B": jax.random.normal(ks[6], (cfg.conv_width, g * N), jnp.float32) * 0.1,
+        "conv_C": jax.random.normal(ks[7], (cfg.conv_width, g * N), jnp.float32) * 0.1,
+        "conv_bx": jnp.zeros((di,), jnp.float32),
+        "conv_bB": jnp.zeros((g * N,), jnp.float32),
+        "conv_bC": jnp.zeros((g * N,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": norm_init(di),
+        "out_proj": dense_init(jax.random.fold_in(key, 99), di, h,
+                               scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv + SiLU.  x: (b, s, c); w: (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def apply_ssm(p, x, cfg: ModelConfig, *, state=None):
+    """Chunked SSD forward.  x: (b, s, h), s % ssm_chunk == 0 (or s <= chunk).
+
+    Returns (y, (final_state, None)) so prefill can hand off to decode.
+    """
+    b, s, h = x.shape
+    di, N, P, nh, g = _dims(cfg)
+    Q = min(cfg.ssm_chunk, s)
+    dtype = x.dtype
+
+    z = x @ p["in_z"].astype(dtype)
+    u_x = x @ p["in_x"].astype(dtype)
+    u_B = x @ p["in_B"].astype(dtype)
+    u_C = x @ p["in_C"].astype(dtype)
+    xr = _causal_conv(u_x, p["conv_x"].astype(dtype), p["conv_bx"])
+    B = _causal_conv(u_B, p["conv_B"].astype(dtype), p["conv_bB"])
+    C = _causal_conv(u_C, p["conv_C"].astype(dtype), p["conv_bC"])
+    dt = x @ p["in_dt"].astype(dtype)
+
+    # conv-state tails for prefill -> decode handoff: the last (width-1)
+    # pre-activation rows of each conv branch
+    w1 = cfg.conv_width - 1
+    def _tail(u):
+        if s >= w1:
+            return u[:, s - w1:s]
+        return jnp.pad(u, ((0, 0), (w1 - s, 0), (0, 0)))
+    conv_tails = {"conv_x": _tail(u_x), "conv_B": _tail(u_B),
+                  "conv_C": _tail(u_C)}
+
+    xin = xr.reshape(b, s, nh, P)
+    Bh = jnp.repeat(B.reshape(b, s, g, N), nh // g, axis=2)  # (b,s,nh,N)
+    Ch = jnp.repeat(C.reshape(b, s, g, N), nh // g, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,s,nh)
+
+    # pad the sequence up to a chunk multiple; padded steps get dt = 0, i.e.
+    # unit decay and zero input — they cannot perturb y or the final state.
+    s_orig = s
+    if s % Q:
+        pad = Q - s % Q
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    dA = dt * A
+    x_dt = xin * dt.astype(dtype)[..., None]
+
+    # ---- chunk ---------------------------------------------------------------
+    nc = s // Q
+    def ck(t):
+        return t.reshape((b, nc, Q) + t.shape[2:])
+    dA_c = ck(dA)                                   # (b,nc,Q,nh) f32
+    seg = jnp.cumsum(dA_c, axis=2)
+    x_c, B_c, C_c = ck(x_dt), ck(Bh), ck(Ch)
+
+    # intra-chunk: ((C Bᵀ) ∘ L) x.  The mask goes INSIDE the exponent:
+    # masked (k > q) entries have positive exponents that overflow to inf,
+    # and 0*inf in the backward pass poisons gradients with NaN.
+    CB = jnp.einsum("bcqhn,bckhn->bcqkh", C_c, B_c)
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    att = (CB.astype(jnp.float32) * L).astype(dtype)
+    Y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", att, x_c)
+
+    # chunk states
+    decay_states = jnp.exp(seg[:, :, -1:, :] - seg)
+    S = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", B_c, decay_states.astype(dtype), x_c)
+
+    # inter-chunk recurrence (associative scan over chunks)
+    chunk_decay = jnp.exp(jnp.sum(dA_c, axis=2))    # (b,nc,nh)
+    if state is None:
+        state = jnp.zeros((b, nh, N, P), dtype)
+    d_all = jnp.concatenate([jnp.ones((b, 1, nh), jnp.float32), chunk_decay], 1)
+    S_all = jnp.concatenate([state[:, None].astype(dtype), S], 1)
+
+    def combine(a_, b_):
+        d1, s1 = a_
+        d2, s2 = b_
+        return d1 * d2, s2 + d2[..., None, None].astype(s2.dtype) * s1
+
+    d_sc, S_sc = jax.lax.associative_scan(combine, (d_all, S_all), axis=1)
+    S_prev = S_sc[:, :-1]
+    new_state = S_sc[:, -1]
+
+    Y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                       C_c, S_prev, jnp.exp(seg).astype(dtype))
+
+    y = (Y_diag + Y_off).reshape(b, s, nh, P)
+    y = y + xin * p["D"].astype(dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)[:, :s_orig]
+    y = norm_apply(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(dtype)
+    return out, (new_state, conv_tails)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, N, P, nh, g = _dims(cfg)
+    w = cfg.conv_width - 1
+    return {
+        "state": jnp.zeros((batch, nh, N, P), dtype),
+        "conv_x": jnp.zeros((batch, w, di), dtype),
+        "conv_B": jnp.zeros((batch, w, g * N), dtype),
+        "conv_C": jnp.zeros((batch, w, g * N), dtype),
+    }
+
+
+def _conv_step(buf, new, w, b):
+    """One causal-conv step.  buf: (b, k-1, c); new: (b, c)."""
+    full = jnp.concatenate([buf, new[:, None]], 1)
+    out = jax.nn.silu(jnp.einsum("bkc,kc->bc", full, w) + b.astype(new.dtype))
+    return out, full[:, 1:]
+
+
+def decode_ssm(p, x, cfg: ModelConfig, cache):
+    """Single-token recurrent step.  x: (b, 1, h)."""
+    b = x.shape[0]
+    di, N, P, nh, g = _dims(cfg)
+    dtype = x.dtype
+    xt = x[:, 0]
+    z = xt @ p["in_z"].astype(dtype)
+    xr, ncx = _conv_step(cache["conv_x"].astype(dtype), xt @ p["in_x"].astype(dtype),
+                         p["conv_x"].astype(dtype), p["conv_bx"])
+    B, ncB = _conv_step(cache["conv_B"].astype(dtype), xt @ p["in_B"].astype(dtype),
+                        p["conv_B"].astype(dtype), p["conv_bB"])
+    C, ncC = _conv_step(cache["conv_C"].astype(dtype), xt @ p["in_C"].astype(dtype),
+                        p["conv_C"].astype(dtype), p["conv_bC"])
+    dt = xt @ p["in_dt"].astype(dtype)
+
+    xin = xr.reshape(b, nh, P)
+    Bh = jnp.repeat(B.reshape(b, g, N), nh // g, axis=1)
+    Ch = jnp.repeat(C.reshape(b, g, N), nh // g, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b, nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A).astype(dtype)
+    x_dt = xin * dt.astype(dtype)[..., None]
+
+    state = cache["state"].astype(dtype)
+    state = state * dA[..., None, None] + jnp.einsum("bhn,bhp->bhnp", Bh, x_dt)
+    y = jnp.einsum("bhnp,bhn->bhp", state, Ch) + xin * p["D"].astype(dtype)[None, :, None]
+    y = y.reshape(b, di)
+    y = norm_apply(p["norm"], y * jax.nn.silu(z))
+    out = (y @ p["out_proj"].astype(dtype))[:, None]
+    return out, {"state": state, "conv_x": ncx, "conv_B": ncB, "conv_C": ncC}

@@ -1,0 +1,70 @@
+"""Serving: prefill + single-token decode steps with sharded caches.
+
+`decode_step` is what the decode_32k / long_500k dry-run cells lower: one new
+token against a seq_len-deep cache.  KV caches are sequence-sharded on the
+`model` axis (flash-decode-style distributed softmax — see
+parallel/sharding.cache_specs); SSM states are head-sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import apply_lm, init_caches
+from ..models.layers import compute_dtype
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int):
+    """prefill(params, tokens[, patch_embeds, encoder_frames]) ->
+    (next_token_logits, caches)."""
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        caches = init_caches(cfg, b, s_max, compute_dtype(cfg.dtype))
+        logits, caches, _ = apply_lm(
+            params, tokens, cfg, caches=caches, cache_index=0,
+            patch_embeds=batch.get("patch_embeds"),
+            encoder_frames=batch.get("encoder_frames"))
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode(params, token, caches, index) -> (logits, new_caches).
+
+    token: (b, 1); index: scalar int32 — the cache write position (and the
+    rotary position of the new token).
+    """
+
+    def decode(params, token, caches, index, enc_out=None):
+        logits, new_caches, _ = apply_lm(
+            params, token, cfg, caches=caches, cache_index=index,
+            decode=True, enc_out=enc_out)
+        return logits[:, -1], new_caches
+
+    return decode
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
+                    num_tokens: int, s_max: int = 0):
+    """Reference end-to-end generation loop (examples / tests)."""
+    b, s0 = prompt.shape
+    s_max = s_max or (s0 + num_tokens)
+    prefill = jax.jit(make_prefill_step(cfg, s_max))
+    decode = jax.jit(make_decode_step(cfg))
+    logits, caches = prefill(params, {"tokens": prompt})
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    idx = jnp.asarray(s0, jnp.int32)
+    for _ in range(num_tokens - 1):
+        logits, caches = decode(params, tok, caches, idx)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        idx = idx + 1
+    return jnp.concatenate(out, axis=1)

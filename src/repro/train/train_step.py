@@ -1,0 +1,87 @@
+"""Training step: value_and_grad + microbatched gradient accumulation +
+AdamW update, built for pjit with parameter donation.
+
+Gradient accumulation runs as a `lax.scan` over microbatches (constant HLO
+size), with grads accumulated in f32.  Remat policy is applied inside the
+model's layer scan (models/blocks.py), so activation memory per microbatch is
+O(layers x carry) instead of O(layers x activations).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MeshConfig, ModelConfig, ShapeConfig, TrainConfig
+from ..models import lm_loss
+from ..optim.adamw import OptState, apply_updates
+
+
+def num_microbatches(shape: ShapeConfig, mesh_cfg: MeshConfig,
+                     tc: TrainConfig) -> int:
+    per_step = mesh_cfg.dp * tc.microbatch_per_device
+    if shape.global_batch % per_step:
+        raise ValueError(
+            f"global_batch {shape.global_batch} % (dp {mesh_cfg.dp} * "
+            f"microbatch {tc.microbatch_per_device}) != 0")
+    return shape.global_batch // per_step
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_micro: int = 1,
+                    batch_spec: Any = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch_spec: optional PartitionSpec pytree for ONE microbatch (leading
+    batch dim sharded over the DP axes).  Without it, the (global_batch,) ->
+    (n_micro, micro) reshape lets the SPMD partitioner move the batch
+    sharding onto the scan axis, replicating compute dp-fold — we measured
+    exactly that before pinning the constraint (EXPERIMENTS.md §Perf).
+    """
+
+    def loss_fn(p, mb):
+        return lm_loss(p, mb, cfg, remat=tc.remat)
+
+    def constrain(mb):
+        if batch_spec is None:
+            return mb
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            mb, {k: batch_spec[k] for k in mb})
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, constrain(batch))
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, constrain(mb))
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            (grads, loss_sum), ms = jax.lax.scan(acc, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        new_params, new_opt, om = apply_updates(params, grads, opt_state, tc)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, tc: TrainConfig):
+    def eval_step(params, batch):
+        loss, metrics = lm_loss(params, batch, cfg, remat=tc.remat)
+        return metrics
+    return eval_step

@@ -1,0 +1,159 @@
+"""Core co-design engine: paper formulas, quantization math, advisor case
+studies (Fig. 1, §VII-B, Fig. 20)."""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import ModelConfig, TRAIN_4K
+from repro.core import (advisor, gemm_model, quantization as q,
+                        transformer_gemms as tg)
+from repro.core.hardware import A100_40GB, TPU_V5E, get_hardware
+
+
+def vanilla(h=2560, L=32, a=32, v=50257, s=2048):
+    return ModelConfig(name="vanilla", family="dense", num_layers=L,
+                       d_model=h, num_heads=a, num_kv_heads=a, d_ff=4 * h,
+                       vocab_size=v, mlp_type="gelu", norm_type="layernorm")
+
+
+class TestPaperFormulas:
+    def test_param_count_matches_paper_formula(self):
+        # paper §III-C: P = 12 h^2 L + 13 h L + (v + s) h.  Our count covers
+        # the same terms (untied head ~ +vh); require agreement within 3%.
+        h, L, v, s = 2560, 32, 50257, 2048
+        cfg = vanilla(h, L, v=v, s=s)
+        paper = 12 * h * h * L + 13 * h * L + (v + s) * h
+        ours = cfg.param_count() - v * h  # paper assumes tied head
+        assert abs(ours - paper) / paper < 0.03
+
+    def test_forward_flops_formula(self):
+        # paper: 24 b s h^2 (1 + s/6h) per layer
+        h, b, s = 2560, 4, 2048
+        cfg = vanilla(h, L=1)
+        gemms = tg.layer_gemms(cfg, b, s)
+        got = sum(g.flops for g in gemms)
+        want = tg.vanilla_forward_flops(h, b, s)
+        assert abs(got - want) / want < 0.01
+
+    def test_table2_gemm_shapes(self):
+        # Table II: QKV transform is (b s, h) x (h, 3h/t)
+        cfg = vanilla()
+        b, s, t = 4, 2048, 4
+        gemms = {g.name: g for g in tg.layer_gemms(cfg, b, s, t=t)}
+        qkv = gemms["qkv_transform"]
+        assert (qkv.m, qkv.k, qkv.n) == (b * s, cfg.d_model, 3 * cfg.d_model // t)
+        score = gemms["attn_score"]
+        assert score.batch == b * cfg.num_heads // t
+        assert (score.m, score.k, score.n) == (s, cfg.head_dim, s)
+
+
+class TestQuantization:
+    def test_tile_utilization_aligned_is_one(self):
+        assert q.tile_utilization(256, 256, 256, TPU_V5E) == pytest.approx(1.0)
+
+    def test_tile_utilization_misaligned(self):
+        # head_dim 80 -> padded to 128 lanes: utilization 80/128
+        u = q.tile_utilization(4096, 4096, 80, TPU_V5E)
+        assert u == pytest.approx(80 / 128, rel=1e-6)
+
+    def test_wave_quantization_gpu(self):
+        # 109 blocks on 108 SMs -> half the throughput of 108 blocks
+        hw = A100_40GB
+        full = q.wave_efficiency(128 * 9, 256 * 12, hw)  # 108 tiles
+        spill = q.wave_efficiency(128 * 9, 256 * 12 + 256, hw)  # a 109th tile
+        assert full == pytest.approx(1.0)
+        assert spill < 0.6
+
+    def test_wave_free_constraint(self):
+        hw = A100_40GB
+        assert q.wave_free(128 * 54, 256 * 2, hw)  # 108 tiles exactly
+        assert not q.wave_free(128 * 54 + 1, 256 * 2, hw)
+
+    def test_tpu_has_no_wave_quantization(self):
+        assert q.wave_efficiency(100, 100, TPU_V5E) == 1.0
+
+    def test_shard_quantization(self):
+        assert q.shard_quantization(64, 16) == 1.0
+        assert q.shard_quantization(20, 16) == pytest.approx(20 / 32)
+
+
+class TestGemmModel:
+    def test_aligned_beats_misaligned(self):
+        g_al = gemm_model.GEMM("a", 4096, 128, 4096, batch=32)
+        g_mis = gemm_model.GEMM("b", 4096, 80, 4096, batch=32)
+        e_al = gemm_model.estimate(g_al)
+        e_mis = gemm_model.estimate(g_mis)
+        assert e_al.achieved_tflops > e_mis.achieved_tflops
+
+    def test_memory_bound_small_gemm(self):
+        e = gemm_model.estimate(gemm_model.GEMM("small", 128, 128, 128))
+        assert e.bound in ("memory", "overhead")
+
+    def test_compute_bound_big_gemm(self):
+        e = gemm_model.estimate(gemm_model.GEMM("big", 8192, 8192, 8192))
+        assert e.bound == "compute"
+
+
+class TestAdvisorCaseStudies:
+    def test_gpt3_case_study(self):
+        # Fig. 1: the 2.7B shape (a=32, head_dim 80) has a faster nearby
+        # shape with a=20 (head_dim 128); paper reports ~1.18-1.39x.
+        c0 = vanilla()
+        props = advisor.advise(c0, microbatch=4)
+        changes = {p.change: p for p in props}
+        a20 = [p for p in props if "heads 32 -> 20" in p.change]
+        assert a20, f"a=20 proposal missing: {list(changes)}"
+        assert 1.05 < a20[0].predicted_speedup < 1.6
+        assert abs(a20[0].param_delta) < 1e-6
+
+    def test_vocab_padding_proposal(self):
+        c0 = vanilla()
+        props = advisor.advise(c0, microbatch=4)
+        vp = [p for p in props if "pad vocab" in p.change]
+        assert vp and vp[0].config.vocab_size == 50304  # the nanoGPT number
+        assert vp[0].predicted_speedup >= 1.0
+
+    def test_swiglu_dff_search(self):
+        # §VII-B: SwiGLU 8h/3 misaligns; advisor proposes a lane-aligned d_ff
+        h = 4096
+        cfg = ModelConfig(name="sw", family="dense", num_layers=32,
+                          d_model=h, num_heads=32, num_kv_heads=32,
+                          d_ff=int(8 * h / 3),  # 10922: misaligned
+                          vocab_size=32000, mlp_type="swiglu")
+        props = advisor.advise(cfg)
+        dff = [p for p in props if "d_ff" in p.change]
+        assert dff
+        best = dff[0].config.d_ff
+        assert best % 128 == 0
+        # llama-2-7b chose 11008 = 86*128 in exactly this range
+        assert 10624 <= best <= 11264
+
+    def test_check_alignment_flags_misalignment(self):
+        bad = {f.rule: f for f in advisor.check_alignment(vanilla())}
+        assert bad["vocab_alignment"].severity == "bad"
+        assert bad["head_dim_alignment"].severity == "bad"
+
+    def test_best_combined_stacks_fixes(self):
+        p = advisor.best_combined(vanilla())
+        assert p.predicted_speedup > 1.1
+        # head_dim ends lane-aligned; vocab padding is enforced structurally
+        # by ModelConfig.padded_vocab_size (its tile win on TPU is ~0.1%, so
+        # the greedy ranker may not pick it — unlike the GPU kernel-selection
+        # cliff the paper reports)
+        assert (p.config.d_model // p.config.num_heads) % 64 == 0
+
+
+class TestArchGemmEnumeration:
+    @pytest.mark.parametrize("arch", [
+        "zamba2-2.7b", "qwen1.5-4b", "nemotron-4-340b", "internlm2-1.8b",
+        "command-r-plus-104b", "deepseek-v3-671b",
+        "llama4-maverick-400b-a17b", "internvl2-76b", "whisper-small",
+        "mamba2-780m"])
+    def test_model_gemms_nonempty_all_archs(self, arch):
+        from repro.configs.registry import get_config
+        cfg = get_config(arch)
+        gemms = tg.model_gemms(cfg, b=1, s=512, t=16, mode="train")
+        assert len(gemms) > cfg.num_layers  # at least one GEMM per layer
+        assert all(g.flops > 0 for g in gemms)
+        decode = tg.model_gemms(cfg, b=4, s=512, t=16, mode="decode")
+        assert sum(g.flops for g in decode) < sum(g.flops for g in gemms)

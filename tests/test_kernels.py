@@ -1,0 +1,108 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import _fold, _unfold, flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.ops import alignment_report, matmul
+from repro.kernels.matmul.ref import matmul_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [
+        (128, 128, 128), (256, 128, 384), (128, 512, 128),
+        (200, 80, 72),       # misaligned: exercises the padding path
+        (64, 64, 64), (384, 256, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matmul_sweep(self, m, k, n, dtype):
+        a = jax.random.normal(KEY, (m, k), dtype)
+        b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+        got = matmul(a, b, interpret=True)
+        want = matmul_ref(a, b)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (64, 128, 64)])
+    def test_block_shapes(self, bm, bn, bk):
+        a = jax.random.normal(KEY, (256, 256), jnp.float32)
+        b = jax.random.normal(KEY, (256, 256), jnp.float32)
+        got = matmul(a, b, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(a, b)),
+                                   atol=2e-4, rtol=2e-5)
+
+    def test_alignment_report(self):
+        r = alignment_report(4096, 80, 4096)
+        assert not r["aligned"]
+        assert r["mxu_utilization"] == pytest.approx(80 / 128, rel=1e-3)
+        assert alignment_report(4096, 128, 4096)["aligned"]
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("b,s,a,kv,d", [
+        (2, 256, 4, 4, 64),   # MHA
+        (1, 256, 8, 2, 128),  # GQA 4:1
+        (2, 128, 4, 1, 64),   # MQA
+        (1, 200, 4, 2, 64),   # misaligned seq: padding path
+        (1, 384, 2, 2, 32),   # small head_dim
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_flash_sweep(self, b, s, a, kv, d, causal):
+        if not causal and s % 128:
+            pytest.skip("non-causal requires block-divisible skv")
+        q = jax.random.normal(KEY, (b, s, a, d), jnp.float32) * 0.5
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, d)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, d)) * 0.5
+        got = flash_attention(q, k, v, causal=causal, interpret=True)
+        want = _unfold(attention_ref(_fold(q), _fold(k), _fold(v),
+                                     causal=causal), b, a)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_flash_bf16(self):
+        b, s, a, d = 1, 256, 4, 64
+        q = (jax.random.normal(KEY, (b, s, a, d)) * 0.5).astype(jnp.bfloat16)
+        k = (jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, a, d)) * 0.5).astype(jnp.bfloat16)
+        v = (jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, a, d)) * 0.5).astype(jnp.bfloat16)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = _unfold(attention_ref(_fold(q), _fold(k), _fold(v), causal=True),
+                       b, a)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+    def test_block_size_invariance(self):
+        b, s, a, d = 1, 512, 2, 64
+        q = jax.random.normal(KEY, (b, s, a, d)) * 0.5
+        k = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, a, d)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, a, d)) * 0.5
+        o1 = flash_attention(q, k, v, block_q=128, block_kv=128, interpret=True)
+        o2 = flash_attention(q, k, v, block_q=256, block_kv=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestBlockedAttentionXLA:
+    """The XLA twin (models/blocked_attention) must match both the naive
+    reference and the Pallas kernel."""
+
+    def test_matches_naive_and_kernel(self):
+        from repro.models.attention import _sdpa
+        from repro.models.blocked_attention import blocked_sdpa
+        b, s, a, kv, d = 2, 256, 4, 2, 64
+        q = jax.random.normal(KEY, (b, s, a, d)) * 0.5
+        k = jax.random.normal(jax.random.fold_in(KEY, 5), (b, s, kv, d)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(KEY, 6), (b, s, kv, d)) * 0.5
+        naive = _sdpa(q, k, v, causal=True)
+        blocked = blocked_sdpa(q, k, v, causal=True, block_kv=64)
+        pallas = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(blocked), np.asarray(naive),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(pallas), np.asarray(naive),
+                                   atol=3e-5, rtol=3e-5)

@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import ModelConfig, TRAIN_4K
+from repro.core import advisor, quantization as q
+from repro.core.gemm_model import GEMM, estimate
+from repro.core.hardware import TPU_V5E, A100_40GB
+from repro.data.pipeline import synthetic_tokens
+from repro.optim.adamw import dequantize_i8, quantize_i8
+
+SET = settings(deadline=None, max_examples=40)
+
+dims = st.integers(min_value=1, max_value=16384)
+small_dims = st.integers(min_value=1, max_value=512)
+
+
+@SET
+@given(m=dims, n=dims, k=dims)
+def test_tile_utilization_in_unit_interval(m, n, k):
+    for hw in (TPU_V5E, A100_40GB):
+        u = q.tile_utilization(m, n, k, hw)
+        assert 0 < u <= 1.0
+
+
+@SET
+@given(m=dims, n=dims, k=dims, batch=st.integers(1, 64))
+def test_estimate_respects_roofline(m, n, k, batch):
+    g = GEMM("g", m, k, n, batch=batch)
+    e = estimate(g, TPU_V5E)
+    # achieved throughput can never exceed peak
+    assert e.achieved_tflops <= TPU_V5E.peak_flops / 1e12 + 1e-6
+    assert e.time_s >= g.flops / TPU_V5E.peak_flops - 1e-12
+
+
+@SET
+@given(x=dims, mult=st.sampled_from([8, 16, 64, 128, 256]))
+def test_round_up_properties(x, mult):
+    r = q.round_up(x, mult)
+    assert r >= x and r % mult == 0 and r - x < mult
+
+
+@SET
+@given(n=st.integers(1, 2 ** 30))
+def test_pow2_factor_divides(n):
+    f = q.pow2_factor(n)
+    assert n % f == 0
+    assert f & (f - 1) == 0  # power of two
+
+
+@SET
+@given(dim=dims, shards=st.sampled_from([1, 2, 4, 8, 16, 32]))
+def test_shard_quantization_bounds(dim, shards):
+    u = q.shard_quantization(dim, shards)
+    assert 0 < u <= 1
+    if dim % shards == 0:
+        assert u == 1.0
+
+
+@SET
+@given(h_mult=st.integers(2, 40), heads=st.sampled_from([8, 16, 20, 32, 40]))
+def test_advisor_proposals_preserve_params_and_help(h_mult, heads):
+    h = 128 * h_mult
+    if h % heads:
+        return
+    cfg = ModelConfig(name="p", family="dense", num_layers=8, d_model=h,
+                      num_heads=heads, num_kv_heads=heads, d_ff=4 * h,
+                      vocab_size=50257, mlp_type="gelu")
+    props = advisor.advise(cfg, param_tolerance=0.03)
+    for p in props[:4]:
+        assert abs(p.param_delta) <= 0.03 + 1e-9
+        assert p.predicted_speedup > 0
+
+
+@SET
+@given(shape=st.sampled_from([(7,), (128,), (130,), (4, 33), (2, 3, 5)]),
+       seed=st.integers(0, 2 ** 16))
+def test_int8_quantization_roundtrip_error(shape, seed):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), shape)) * 3.0
+    qd = quantize_i8(jnp.asarray(x))
+    back = np.asarray(dequantize_i8(qd, shape))
+    # blockwise absmax int8: error bounded by scale/2 per block
+    err = np.abs(back - x)
+    bound = np.max(np.abs(x)) / 127.0 + 1e-7
+    assert np.max(err) <= bound * 1.01
+
+
+@SET
+@given(seed=st.integers(0, 2 ** 20), step=st.integers(0, 10 ** 6),
+       batch=st.integers(1, 8), seq=st.integers(1, 128),
+       vocab=st.integers(2, 200000))
+def test_synthetic_tokens_deterministic_and_in_range(seed, step, batch, seq, vocab):
+    a = synthetic_tokens(seed, step, batch, seq, vocab)
+    b = synthetic_tokens(seed, step, batch, seq, vocab)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < vocab
+
+
+@SET
+@given(v=st.integers(1, 300000))
+def test_padded_vocab_invariants(v):
+    cfg = ModelConfig(name="v", family="dense", num_layers=1, d_model=128,
+                      num_heads=2, num_kv_heads=2, d_ff=256, vocab_size=v)
+    pv = cfg.padded_vocab_size
+    assert pv >= v and pv % 128 == 0 and pv - v < 128

@@ -1,0 +1,95 @@
+"""Mamba2 SSD: chunked dual form vs naive sequential recurrence, and
+decode-step parity with the chunked prefill's final state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.ssm import (_causal_conv, _dims, apply_ssm, decode_ssm,
+                              init_ssm, init_ssm_cache)
+
+KEY = jax.random.PRNGKey(3)
+
+
+def naive_ssd(p, x, cfg):
+    """Token-by-token reference recurrence (the SSM definition)."""
+    b, s, h = x.shape
+    di, N, P, nh, g = _dims(cfg)
+    z = x @ p["in_z"]
+    xr = _causal_conv(x @ p["in_x"], p["conv_x"], p["conv_bx"])
+    B = _causal_conv(x @ p["in_B"], p["conv_B"], p["conv_bB"])
+    C = _causal_conv(x @ p["in_C"], p["conv_C"], p["conv_bC"])
+    dt = jax.nn.softplus((x @ p["in_dt"]) + p["dt_bias"])  # (b,s,nh)
+    A = -jnp.exp(p["A_log"])
+    xin = xr.reshape(b, s, nh, P)
+    Bh = jnp.repeat(B.reshape(b, s, g, N), nh // g, axis=2)
+    Ch = jnp.repeat(C.reshape(b, s, g, N), nh // g, axis=2)
+
+    state = jnp.zeros((b, nh, N, P))
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t] * A)  # (b, nh)
+        xdt = xin[:, t] * dt[:, t][..., None]
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bh[:, t], xdt)
+        y = jnp.einsum("bhnp,bhn->bhp", state, Ch[:, t]) + xin[:, t] * p["D"][None, :, None]
+        ys.append(y.reshape(b, di))
+    y = jnp.stack(ys, axis=1)
+    from repro.models.layers import norm_apply
+    y = norm_apply(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], state
+
+
+@pytest.mark.parametrize("s", [32, 64, 96])
+def test_chunked_matches_naive(s):
+    cfg = get_smoke_config("mamba2-780m")
+    p = init_ssm(KEY, cfg)
+    x = jax.random.normal(KEY, (2, s, cfg.d_model)) * 0.5
+    got, (state_got, _) = apply_ssm(p, x, cfg)
+    want, state_want = naive_ssd(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(state_got), np.asarray(state_want),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_decode_continues_prefill():
+    """decode_ssm from the chunked state must equal running the chunked form
+    over the extended sequence."""
+    cfg = get_smoke_config("mamba2-780m")
+    p = init_ssm(KEY, cfg)
+    b, s = 2, 32
+    x = jax.random.normal(KEY, (b, s + 1, cfg.d_model)) * 0.5
+
+    full, _ = apply_ssm(p, x, cfg)
+    want_last = full[:, -1]
+
+    _, (state, _) = apply_ssm(p, x[:, :s], cfg)
+    cache = init_ssm_cache(cfg, b, jnp.float32)
+    cache["state"] = state
+    # conv caches need the last (width-1) preactivations of each branch
+    w = cfg.conv_width - 1
+    cache["conv_x"] = (x[:, s - w:s] @ p["in_x"])
+    cache["conv_B"] = (x[:, s - w:s] @ p["in_B"])
+    cache["conv_C"] = (x[:, s - w:s] @ p["in_C"])
+    got, new_cache = decode_ssm(p, x[:, s:s + 1], cfg, cache)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want_last),
+                               atol=2e-4, rtol=2e-3)
+    assert new_cache["state"].shape == cache["state"].shape
+
+
+def test_state_carry_across_chunk_boundaries():
+    """Feeding two halves with carried state == one full pass."""
+    cfg = get_smoke_config("mamba2-780m")
+    Q = cfg.ssm_chunk
+    p = init_ssm(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 2 * Q, cfg.d_model)) * 0.5
+    full, (sf, _) = apply_ssm(p, x, cfg)
+    # NOTE: splitting mid-sequence also splits the causal conv; feed overlap
+    # is not modeled here, so compare states only for conv-free positions by
+    # running exact halves through the public API with state carry.
+    _, (s1, _) = apply_ssm(p, x[:, :Q], cfg)
+    y2, (s2, _) = apply_ssm(p, x[:, Q:], cfg, state=s1)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sf), atol=3e-3,
+                               rtol=3e-2)

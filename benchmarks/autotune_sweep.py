@@ -1,0 +1,49 @@
+"""Measured block-size autotuning sweep (beyond-paper: closes the loop
+between the analytic §V cost model and the kernels that actually run).
+
+For each problem shape: sweep the tile-aligned candidate lattice, report the
+measured winner, its speedup over the 128-default blocks, and the analytic
+model's pick — the gap between the two columns is exactly the calibration
+error `core.gemm_model.MeasuredProfile` corrects for.
+
+CPU container caveat: kernels run in Pallas interpret mode, so times rank
+candidates relatively; on a TPU host the same sweep produces deployment
+timings.  Shapes are kept small so the whole sweep stays in seconds.
+"""
+import jax.numpy as jnp
+
+from repro.core.gemm_model import GEMM, estimate
+from repro.core.hardware import get_hardware
+from repro.tuning import TuningCache
+from repro.tuning.search import autotune_flash_attention, autotune_matmul
+
+MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256), (384, 256, 128)]
+FLASH_SHAPES = [(1, 256, 2, 64)]  # (batch, seq, heads, head_dim)
+
+
+def run():
+    rows = []
+    hw = get_hardware()
+    cache = TuningCache()  # in-memory; examples/autotune.py persists one
+    for m, k, n in MATMUL_SHAPES:
+        cfg = autotune_matmul(m, k, n, dtype=jnp.float32, hw=hw, cache=cache,
+                              iters=2, warmup=1, max_candidates=6)
+        blk = cfg.blocks
+        analytic = estimate(GEMM("a", m, k, n, dtype_bytes=4), hw)
+        rows.append((
+            f"autotune_sweep/matmul_{m}x{k}x{n}", round(cfg.time_us, 1),
+            f"blocks={blk['block_m']}x{blk['block_n']}x{blk['block_k']};"
+            f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
+            f"candidates={cfg.candidates_tried};"
+            f"analytic_us={analytic.time_s * 1e6:.2f}"))
+    for b, s, a, d in FLASH_SHAPES:
+        cfg = autotune_flash_attention(b, s, a, d, hw=hw, cache=cache,
+                                       iters=2, warmup=1, max_candidates=4)
+        blk = cfg.blocks
+        rows.append((
+            f"autotune_sweep/flash_b{b}_s{s}_a{a}_d{d}",
+            round(cfg.time_us, 1),
+            f"blocks={blk['block_q']}x{blk['block_kv']};"
+            f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
+            f"candidates={cfg.candidates_tried}"))
+    return rows

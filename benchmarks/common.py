@@ -5,24 +5,13 @@ ANALYTIC (this container is CPU-only; the cost model is
 repro.core.gemm_model targeting TPU v5e, with the paper's A100 available via
 hw="a100" for fidelity checks).  Where a CPU wall-clock smoke adds signal
 (trend checks at tiny scale), it is labeled `cpu_us`.
+
+The wall-clock timer lives in repro.tuning.measure so the autotuner and the
+benchmark harness measure identically; `wall_us` here is a re-export.
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-
-
-def wall_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    f = jax.jit(fn)
-    for _ in range(warmup):
-        jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+from repro.tuning.measure import wall_us  # noqa: F401  (harness-wide timer)
 
 
 def emit(rows):

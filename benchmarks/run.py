@@ -18,6 +18,7 @@ MODULES = [
     "flash_roofline",        # Fig. 12
     "pythia_inference",      # Fig. 13
     "dimension_order",       # Fig. 14
+    "autotune_sweep",        # beyond-paper: measured block-size search
 ]
 
 

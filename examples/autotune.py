@@ -1,0 +1,84 @@
+"""End-to-end autotuning workflow: search -> cache -> tuned kernels ->
+measurement-calibrated advisor.
+
+    PYTHONPATH=src python -m examples.autotune [--cache tuning_cache.json]
+
+1. Sweep tile-aligned block candidates for a few matmul shapes and one
+   flash-attention shape, timing each (interpret mode on CPU; real kernels
+   on a TPU host) and persisting the winners to a JSON tuning cache.
+2. Call `matmul(..., tuned=True)` — the wrapper consults the cache and
+   dispatches with the measured-best blocks (verified against the oracle).
+3. Build a `MeasuredProfile` from the cache and run `advisor.propose`, whose
+   step-time predictions are now grounded in the measured timings.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gpt3_2p7b import VARIANTS
+from repro.core import advisor
+from repro.core.gemm_model import MeasuredProfile
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.tuning import TuningCache, set_default_cache
+from repro.tuning.search import autotune_flash_attention, autotune_matmul
+
+MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache", default="tuning_cache.json")
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args()
+
+    print(f"=== 1. block-size search -> {args.cache} ===")
+    cache = TuningCache.load(args.cache)
+    for m, k, n in MATMUL_SHAPES:
+        cfg = autotune_matmul(m, k, n, dtype=jnp.float32, cache=cache,
+                              iters=args.iters, warmup=1, max_candidates=6)
+        b = cfg.blocks
+        print(f"  matmul {m}x{k}x{n}: best blocks "
+              f"({b['block_m']},{b['block_n']},{b['block_k']}) "
+              f"{cfg.time_us:.0f} us, {cfg.speedup_vs_default:.2f}x vs 128^3 "
+              f"({cfg.candidates_tried} candidates)")
+    fcfg = autotune_flash_attention(1, 256, 2, 64, cache=cache,
+                                    iters=args.iters, warmup=1,
+                                    max_candidates=4)
+    print(f"  flash b1 s256 a2 d64: best blocks "
+          f"({fcfg.blocks['block_q']},{fcfg.blocks['block_kv']}) "
+          f"{fcfg.time_us:.0f} us, {fcfg.speedup_vs_default:.2f}x vs 128x128")
+    path = cache.save(args.cache)
+    print(f"  saved {len(cache)} entries -> {path}")
+
+    print("\n=== 2. tuned kernel dispatch ===")
+    set_default_cache(cache)
+    m, k, n = MATMUL_SHAPES[0]
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    out = matmul(a, b, tuned=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
+                               atol=2e-4, rtol=2e-5)
+    ent = cache.get("matmul", (m, k, n), "float32", "tpu_v5e")
+    print(f"  matmul(tuned=True) used cached blocks {ent.blocks} "
+          f"and matches the jnp oracle")
+
+    print("\n=== 3. measurement-calibrated advisor ===")
+    profile = MeasuredProfile.from_cache(cache, "tpu_v5e")
+    print(f"  profile: {len(profile.points)} measured GEMM shapes, "
+          f"calibration x{profile.calibration:.3g} "
+          f"(interpret-mode CPU vs TPU-analytic; ~1-2x on real hardware)")
+    c0 = VARIANTS["c0"]  # GPT-3 2.7B: h=2560, a=32 (head_dim 80)
+    for p in advisor.propose(c0, microbatch=4, profile=profile)[:3]:
+        print(f"  {p.predicted_speedup:.3f}x  {p.change}  "
+              f"(params {p.param_delta:+.2%})")
+    print("done — docs/codesign-guide.md documents the cache format")
+
+
+if __name__ == "__main__":
+    main()

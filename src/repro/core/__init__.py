@@ -8,17 +8,17 @@
   roofline          — three-term roofline from compiled XLA artifacts
 """
 from .hardware import Hardware, TPU_V5E, A100_40GB, V100_16GB, H100_SXM, get_hardware
-from .gemm_model import GEMM, GEMMEstimate, estimate, estimate_many, throughput_tflops, total_time
+from .gemm_model import GEMM, GEMMEstimate, MeasuredProfile, estimate, estimate_many, throughput_tflops, total_time
 from .transformer_gemms import layer_gemms, model_gemms, training_flops, vanilla_forward_flops
-from .advisor import advise, best_combined, check_alignment, score, step_time, Finding, Proposal
+from .advisor import advise, best_combined, check_alignment, propose, score, step_time, Finding, Proposal
 from .roofline import RooflineReport, build_report, collective_bytes, to_row
 from . import quantization
 
 __all__ = [
     "Hardware", "TPU_V5E", "A100_40GB", "V100_16GB", "H100_SXM", "get_hardware",
-    "GEMM", "GEMMEstimate", "estimate", "estimate_many", "throughput_tflops", "total_time",
+    "GEMM", "GEMMEstimate", "MeasuredProfile", "estimate", "estimate_many", "throughput_tflops", "total_time",
     "layer_gemms", "model_gemms", "training_flops", "vanilla_forward_flops",
-    "advise", "best_combined", "check_alignment", "score", "step_time", "Finding", "Proposal",
+    "advise", "best_combined", "check_alignment", "propose", "score", "step_time", "Finding", "Proposal",
     "RooflineReport", "build_report", "collective_bytes", "to_row",
     "quantization",
 ]

@@ -18,7 +18,8 @@ from typing import List, Optional
 
 from ..configs.base import ModelConfig, ShapeConfig, TRAIN_4K
 from .hardware import Hardware, get_hardware
-from .gemm_model import GEMM, estimate_many, throughput_tflops, total_time
+from .gemm_model import (GEMM, MeasuredProfile, estimate_many,
+                         throughput_tflops, total_time)
 from .transformer_gemms import layer_gemms, model_gemms
 from .quantization import pow2_factor, round_up, shard_quantization
 
@@ -116,23 +117,26 @@ def check_alignment(cfg: ModelConfig, hw: Optional[Hardware] = None,
 
 def score(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
           hw: Optional[Hardware] = None, tp: int = 1,
-          microbatch: int = 1) -> float:
+          microbatch: int = 1,
+          profile: Optional[MeasuredProfile] = None) -> float:
     """Predicted achieved TFLOP/s for one microbatch through the whole model
-    (the paper's Fig. 1 y-axis, analytically)."""
+    (the paper's Fig. 1 y-axis; analytic, or measurement-calibrated when a
+    `MeasuredProfile` is given)."""
     hw = hw or get_hardware()
     mode = "decode" if shape.is_decode else "train"
     gemms = model_gemms(cfg, microbatch, shape.seq_len, t=tp, mode=mode)
-    return throughput_tflops(gemms, hw)
+    return throughput_tflops(gemms, hw, profile)
 
 
 def step_time(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
               hw: Optional[Hardware] = None, tp: int = 1,
-              microbatch: int = 1) -> float:
+              microbatch: int = 1,
+              profile: Optional[MeasuredProfile] = None) -> float:
     hw = hw or get_hardware()
     mode = "decode" if shape.is_decode else "train"
     gemms = model_gemms(cfg, microbatch, shape.seq_len, t=tp, mode=mode)
     mult = 3.0 if shape.mode == "train" else 1.0  # fwd+bwd
-    return mult * total_time(gemms, hw)
+    return mult * total_time(gemms, hw, profile)
 
 
 def _candidate_heads(cfg: ModelConfig, lane: int,
@@ -174,18 +178,23 @@ def _candidate_dff(cfg: ModelConfig, lane: int, tp: int, tol: float) -> List[int
 def advise(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
            hw: Optional[Hardware] = None, tp: int = 1,
            param_tolerance: float = 0.05,
-           microbatch: int = 1) -> List[Proposal]:
+           microbatch: int = 1,
+           profile: Optional[MeasuredProfile] = None) -> List[Proposal]:
     """Search nearby configs; return proposals ranked by predicted speedup.
 
     Reproduces the paper's case studies: for GPT-3 2.7B (h=2560, a=32) the
     top proposals change `a` so head_dim is 64/128-aligned; for SwiGLU models
     it re-searches d_ff around 8h/3; for any model it pads the vocab.
+
+    When `profile` is given, every step-time prediction is grounded in the
+    measured kernel timings it carries (see gemm_model.MeasuredProfile);
+    `propose()` builds that profile from the autotuning cache automatically.
     """
     hw = hw or get_hardware()
     lane = hw.tile_2byte[1]
-    base_t = step_time(cfg, shape, hw, tp, microbatch)
+    base_t = step_time(cfg, shape, hw, tp, microbatch, profile)
     base_params = cfg.param_count()
-    base_tflops = score(cfg, shape, hw, tp, microbatch)
+    base_tflops = score(cfg, shape, hw, tp, microbatch, profile)
     props: List[Proposal] = []
 
     def consider(new_cfg: ModelConfig, change: str):
@@ -193,9 +202,10 @@ def advise(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
         delta = (p - base_params) / base_params
         if abs(delta) > param_tolerance:
             return
-        t = step_time(new_cfg, shape, hw, tp, microbatch)
+        t = step_time(new_cfg, shape, hw, tp, microbatch, profile)
         props.append(Proposal(new_cfg, change, base_t / t, delta,
-                              score(new_cfg, shape, hw, tp, microbatch)))
+                              score(new_cfg, shape, hw, tp, microbatch,
+                                    profile)))
 
     # 1. vocab padding (Fig. 20 / Karpathy rule)
     v_pad = round_up(cfg.vocab_size, lane * max(tp, 1))
@@ -235,22 +245,40 @@ def advise(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
     return props
 
 
+def propose(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
+            hw: Optional[Hardware] = None, tp: int = 1,
+            param_tolerance: float = 0.05, microbatch: int = 1,
+            profile: Optional[MeasuredProfile] = None,
+            cache=None) -> List[Proposal]:
+    """`advise`, grounded in measurement when a tuning cache exists.
+
+    If `profile` is None, one is built from `cache` (default: the process
+    default tuning cache — see repro.tuning.cache).  With no cache entries
+    this degrades gracefully to the purely analytic `advise`.
+    """
+    hw = hw or get_hardware()
+    if profile is None:
+        profile = MeasuredProfile.from_cache(cache, hw.name)
+    return advise(cfg, shape, hw, tp, param_tolerance, microbatch, profile)
+
+
 def best_combined(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
                   hw: Optional[Hardware] = None, tp: int = 1,
-                  param_tolerance: float = 0.05) -> Proposal:
+                  param_tolerance: float = 0.05,
+                  profile: Optional[MeasuredProfile] = None) -> Proposal:
     """Greedily stack the top proposal of each category."""
     hw = hw or get_hardware()
     cur = cfg
     changes = []
     for _ in range(4):
-        props = advise(cur, shape, hw, tp, param_tolerance)
+        props = advise(cur, shape, hw, tp, param_tolerance, profile=profile)
         props = [p for p in props if p.predicted_speedup > 1.005]
         if not props:
             break
         cur = props[0].config
         changes.append(props[0].change)
-    base_t = step_time(cfg, shape, hw, tp)
-    new_t = step_time(cur, shape, hw, tp)
+    base_t = step_time(cfg, shape, hw, tp, profile=profile)
+    new_t = step_time(cur, shape, hw, tp, profile=profile)
     return Proposal(cur, "; ".join(changes) or "no change", base_t / new_t,
                     (cur.param_count() - cfg.param_count()) / cfg.param_count(),
-                    score(cur, shape, hw, tp))
+                    score(cur, shape, hw, tp, profile=profile))

@@ -9,12 +9,18 @@ Predicted kernel time = max(compute_time, memory_time, launch_overhead) where
 `wave_efficiency` applies only on wave-scheduled hardware (GPUs).  The model
 reproduces the paper's Figures 5-10 qualitatively: throughput rises with
 arithmetic intensity, dips at misaligned dims and at wave boundaries.
+
+`MeasuredProfile` grounds the analytic model in reality: built from the
+autotuning cache (`repro.tuning`), it substitutes measured wall times for
+GEMMs whose exact shape was tuned and rescales the rest by the measured/
+analytic calibration ratio, so relative comparisons stay on one scale.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+import statistics
+from typing import Dict, Optional, Tuple
 
 from .hardware import Hardware, get_hardware
 from . import quantization as q
@@ -64,7 +70,7 @@ class GEMMEstimate:
     tile_util: float
     wave_eff: float
     achieved_tflops: float
-    bound: str  # "compute" | "memory" | "overhead"
+    bound: str  # "compute" | "memory" | "overhead" | "measured"
 
     @property
     def efficiency(self) -> float:
@@ -72,7 +78,77 @@ class GEMMEstimate:
         return self.tile_util * self.wave_eff
 
 
-def estimate(gemm: GEMM, hw: Optional[Hardware] = None) -> GEMMEstimate:
+@dataclasses.dataclass(frozen=True)
+class MeasuredProfile:
+    """Measured kernel timings for one hardware target, keyed by GEMM shape.
+
+    Built from the autotuning cache (`MeasuredProfile.from_cache`).  Two uses:
+
+      * exact hit — a GEMM whose (m, k, n, dtype) was autotuned gets the
+        measured per-call wall time (scaled by batch*count) instead of the
+        analytic roofline prediction;
+      * calibration — GEMMs without an exact entry get the analytic time
+        scaled by the median measured/analytic ratio over all entries, so
+        measured and modeled GEMMs stay comparable inside one step_time sum.
+
+    On a real TPU the calibration ratio is the model's systematic error
+    (~1-2x); on this CPU container (interpret-mode timings vs TPU analytic
+    constants) it is large, but uniform — relative rankings survive.
+    """
+
+    hw_name: str
+    # (m, k, n, dtype_bytes) -> measured seconds per single GEMM call
+    points: Dict[Tuple[int, int, int, int], float]
+    calibration: float = 1.0
+
+    @classmethod
+    def from_cache(cls, cache=None,
+                   hw_name: str = "tpu_v5e") -> "Optional[MeasuredProfile]":
+        """Build from a TuningCache (default: the process default cache).
+        Returns None when the cache has no matmul entries for `hw_name`."""
+        # Deferred import: core must stay importable without tuning and
+        # tuning.search imports the kernels, which import core.
+        from ..tuning.cache import get_default_cache
+
+        cache = cache if cache is not None else get_default_cache()
+        hw = get_hardware(hw_name)
+        points: Dict[Tuple[int, int, int, int], float] = {}
+        ratios = []
+        for entry in cache.by_op("matmul", hw_name):
+            m, k, n = entry.shape
+            dtype_bytes = _DTYPE_BYTES.get(entry.dtype, 2)
+            measured_s = entry.time_us * 1e-6
+            points[(m, k, n, dtype_bytes)] = measured_s
+            analytic = estimate(GEMM("cal", m, k, n, dtype_bytes=dtype_bytes), hw)
+            if analytic.time_s > 0:
+                ratios.append(measured_s / analytic.time_s)
+        if not points:
+            return None
+        return cls(hw_name=hw_name, points=dict(points),
+                   calibration=statistics.median(ratios) if ratios else 1.0)
+
+    def measured_time(self, gemm: GEMM) -> Optional[float]:
+        """Measured seconds for `gemm` (batch*count folded in), or None."""
+        t = self.points.get((gemm.m, gemm.k, gemm.n, gemm.dtype_bytes))
+        if t is None:
+            return None
+        return t * gemm.batch * gemm.count
+
+    def blend(self, gemm: GEMM, analytic_s: float) -> Tuple[float, bool]:
+        """(time_s, was_measured): exact measurement if available, else the
+        calibrated analytic prediction."""
+        t = self.measured_time(gemm)
+        if t is not None:
+            return t, True
+        return analytic_s * self.calibration, False
+
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
+                "float8_e4m3fn": 1, "float8_e5m2": 1}
+
+
+def estimate(gemm: GEMM, hw: Optional[Hardware] = None,
+             profile: Optional[MeasuredProfile] = None) -> GEMMEstimate:
     hw = hw or get_hardware()
     util = q.tile_utilization(gemm.m, gemm.n, gemm.k, hw, gemm.dtype_bytes)
     weff = q.wave_efficiency(gemm.m, gemm.n, hw, gemm.batch)
@@ -86,6 +162,10 @@ def estimate(gemm: GEMM, hw: Optional[Hardware] = None) -> GEMMEstimate:
         if time_s == compute_s
         else ("memory" if time_s == memory_s else "overhead")
     )
+    if profile is not None:
+        time_s, measured = profile.blend(gemm, time_s)
+        if measured:
+            bound = "measured"
     return GEMMEstimate(
         gemm=gemm,
         time_s=time_s,
@@ -98,17 +178,20 @@ def estimate(gemm: GEMM, hw: Optional[Hardware] = None) -> GEMMEstimate:
     )
 
 
-def estimate_many(gemms: list[GEMM], hw: Optional[Hardware] = None) -> list[GEMMEstimate]:
+def estimate_many(gemms: list[GEMM], hw: Optional[Hardware] = None,
+                  profile: Optional[MeasuredProfile] = None) -> list[GEMMEstimate]:
     hw = hw or get_hardware()
-    return [estimate(g, hw) for g in gemms]
+    return [estimate(g, hw, profile) for g in gemms]
 
 
-def total_time(gemms: list[GEMM], hw: Optional[Hardware] = None) -> float:
-    return sum(e.time_s for e in estimate_many(gemms, hw))
+def total_time(gemms: list[GEMM], hw: Optional[Hardware] = None,
+               profile: Optional[MeasuredProfile] = None) -> float:
+    return sum(e.time_s for e in estimate_many(gemms, hw, profile))
 
 
-def throughput_tflops(gemms: list[GEMM], hw: Optional[Hardware] = None) -> float:
+def throughput_tflops(gemms: list[GEMM], hw: Optional[Hardware] = None,
+                      profile: Optional[MeasuredProfile] = None) -> float:
     """End-to-end achieved TFLOP/s over a GEMM set (the paper's y-axis)."""
-    t = total_time(gemms, hw)
+    t = total_time(gemms, hw, profile)
     f = sum(g.flops for g in gemms)
     return f / t / 1e12 if t > 0 else 0.0

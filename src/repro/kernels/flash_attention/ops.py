@@ -3,15 +3,23 @@
 `flash_attention` takes model-layout tensors (b, s, heads, head_dim), folds
 batch x heads, pads seq to the block grid, dispatches to the Pallas kernel
 (TPU) or the jnp oracle (CPU fallback / use_pallas=False).
+
+With `tuned=True` the wrapper consults the autotuning cache
+(`repro.tuning.cache`) for a measured-best (block_q, block_kv) for this
+exact problem before falling back to the 128x128 default — see
+`repro.tuning.search.autotune_flash_attention`.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ...core.hardware import get_hardware
 from ...core.quantization import round_up
+from ...tuning.cache import lookup as _tuning_lookup
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
 
@@ -28,15 +36,13 @@ def _unfold(x, b, h):
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
                                              "interpret", "use_pallas"))
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
-                    block_kv: int = 128, interpret: bool = True,
-                    use_pallas: bool = True):
-    """q: (b, sq, a, d); k, v: (b, skv, kv_heads, d).  Returns (b, sq, a, d)."""
+def _flash_jit(q, k, v, *, causal: bool, block_q: int, block_kv: int,
+               interpret: bool, use_pallas: bool):
     b, sq, a, d = q.shape
-    _, skv, nkv, _ = k.shape
     qf, kf, vf = _fold(q), _fold(k), _fold(v)
     if not use_pallas:
         return _unfold(attention_ref(qf, kf, vf, causal=causal), b, a)
+    skv = k.shape[1]
     sq_p = round_up(sq, block_q)
     skv_p = round_up(skv, block_kv)
     if sq_p != sq:
@@ -53,3 +59,28 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     out = flash_attention_pallas(qf, kf, vf, causal=causal, block_q=block_q,
                                  block_kv=block_kv, interpret=interpret)
     return _unfold(out[:, :sq], b, a)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True,
+                    use_pallas: bool = True, tuned: bool = False,
+                    hw_name: Optional[str] = None):
+    """q: (b, sq, a, d); k, v: (b, skv, kv_heads, d).  Returns (b, sq, a, d).
+
+    tuned=True overrides (block_q, block_kv) with the autotuning cache's
+    measured-best config for this problem when one exists (cache misses keep
+    the defaults).  The lookup runs at trace time, outside the jit.
+    """
+    if tuned and use_pallas:
+        b, sq, a, d = q.shape
+        skv = k.shape[1]
+        op = ("flash_attention_causal" if causal else "flash_attention_full")
+        cfg = _tuning_lookup(op, (b, sq, skv, a, d),
+                             jnp.dtype(q.dtype).name,
+                             hw_name or get_hardware().name)
+        if cfg is not None:
+            block_q = cfg.blocks["block_q"]
+            block_kv = cfg.blocks["block_kv"]
+    return _flash_jit(q, k, v, causal=causal, block_q=block_q,
+                      block_kv=block_kv, interpret=interpret,
+                      use_pallas=use_pallas)

@@ -55,7 +55,7 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pl.ANY if False else _vmem((block_m, block_n))],
+        scratch_shapes=[_vmem((block_m, block_n))],
         interpret=interpret,
     )(a, b)
 

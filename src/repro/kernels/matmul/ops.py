@@ -3,6 +3,11 @@
 `matmul` pads misaligned problems up to the block grid (tile quantization
 made explicit — the zero-padding FLOPs are exactly the waste the paper's
 utilization term predicts) and reports alignment via `alignment_report`.
+
+With `tuned=True` the wrapper consults the autotuning cache
+(`repro.tuning.cache`) for a measured-best block shape for this exact
+(m, k, n, dtype, hardware) before falling back to the 128^3 default —
+see `repro.tuning.search.autotune_matmul` for how entries are produced.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ import jax.numpy as jnp
 
 from ...core.hardware import get_hardware
 from ...core.quantization import round_up, tile_utilization
+from ...tuning.cache import lookup as _tuning_lookup
 from .kernel import matmul_pallas
 from .ref import matmul_ref
 
@@ -27,12 +33,9 @@ def _pad2(x, m, n):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret", "use_pallas"))
-def matmul(a: jax.Array, b: jax.Array, *,
-           block_m: int = 128, block_n: int = 128, block_k: int = 128,
-           interpret: bool = True, use_pallas: bool = True) -> jax.Array:
-    """C = A @ B.  use_pallas=False falls back to the jnp oracle (the
-    CPU-container default for model code; kernels are TPU-targeted and
-    validated in interpret mode)."""
+def _matmul_jit(a: jax.Array, b: jax.Array, *,
+                block_m: int, block_n: int, block_k: int,
+                interpret: bool, use_pallas: bool) -> jax.Array:
     if not use_pallas:
         return matmul_ref(a, b)
     m, k = a.shape
@@ -42,6 +45,32 @@ def matmul(a: jax.Array, b: jax.Array, *,
                         block_m=block_m, block_n=block_n, block_k=block_k,
                         interpret=interpret)
     return out[:m, :n]
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           block_m: int = 128, block_n: int = 128, block_k: int = 128,
+           interpret: bool = True, use_pallas: bool = True,
+           tuned: bool = False, hw_name: Optional[str] = None) -> jax.Array:
+    """C = A @ B.  use_pallas=False falls back to the jnp oracle (the
+    CPU-container default for model code; kernels are TPU-targeted and
+    validated in interpret mode).
+
+    tuned=True overrides block_* with the autotuning cache's measured-best
+    config for this (m, k, n, dtype, hw) when one exists (cache misses keep
+    the defaults).  The lookup runs at trace time, outside the jit.
+    """
+    if tuned and use_pallas:
+        m, k = a.shape
+        _, n = b.shape
+        cfg = _tuning_lookup("matmul", (m, k, n), jnp.dtype(a.dtype).name,
+                             hw_name or get_hardware().name)
+        if cfg is not None:
+            block_m = cfg.blocks["block_m"]
+            block_n = cfg.blocks["block_n"]
+            block_k = cfg.blocks["block_k"]
+    return _matmul_jit(a, b, block_m=block_m, block_n=block_n,
+                       block_k=block_k, interpret=interpret,
+                       use_pallas=use_pallas)
 
 
 def alignment_report(m: int, k: int, n: int, dtype_bytes: int = 2,

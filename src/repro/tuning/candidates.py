@@ -1,0 +1,152 @@
+"""Tile-aligned block-size candidate lattices (the autotuner's search space).
+
+The paper's thesis is that tile geometry drives efficiency; this module turns
+that into a *search space*: every candidate block shape is (a) a multiple of
+the hardware's native (sublane, lane) register tile at the given dtype, and
+(b) small enough that the kernel's VMEM working set fits the chip's on-chip
+memory budget (`Hardware.sram_bytes`).  The autotuner (`tuning.search`) then
+*measures* each candidate instead of trusting the analytic model — closing
+the loop between the roofline prediction and the kernel that actually runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from ..core.hardware import Hardware, get_hardware
+from ..core.quantization import round_up
+
+# Don't let the lattice explode: per-dimension caps keep the sweep tractable
+# while covering every block size the kernels plausibly benefit from.
+MAX_BLOCK = 1024
+# Double-buffering factor for streamed input blocks (Pallas pipelines the
+# next block's DMA while computing on the current one).
+DOUBLE_BUFFER = 2
+
+
+def sublane_granule(hw: Hardware, dtype_bytes: int = 2) -> int:
+    """Native second-to-minor tile granularity at `dtype_bytes`.
+
+    TPU packs (32 / dtype_bytes) x 128 register tiles (f32: 8, bf16: 16,
+    int8: 32) — the same scaling quantization.tile_utilization applies.
+    """
+    sub, _ = hw.tile_2byte
+    if hw.name.startswith("tpu"):
+        return max(1, sub * 2 // max(dtype_bytes, 1))
+    return sub
+
+
+def lane_granule(hw: Hardware) -> int:
+    """Minor-most tile granularity (always the full lane width)."""
+    return hw.tile_2byte[1]
+
+
+def _steps(dim: int, granule: int, cap: int = MAX_BLOCK) -> List[int]:
+    """Power-of-two multiples of `granule`, capped by the (padded) problem
+    dim and `cap` — blocks larger than the problem only add padding."""
+    hi = min(cap, round_up(max(dim, 1), granule))
+    out = []
+    b = granule
+    while b <= hi:
+        out.append(b)
+        b *= 2
+    if not out:
+        out = [granule]
+    return out
+
+
+def matmul_vmem_bytes(block_m: int, block_n: int, block_k: int,
+                      dtype_bytes: int = 2) -> int:
+    """VMEM working set of kernels/matmul: double-buffered A and B input
+    blocks, an f32 accumulator scratch, and the output block."""
+    a_blk = block_m * block_k * dtype_bytes
+    b_blk = block_k * block_n * dtype_bytes
+    acc = block_m * block_n * 4
+    out = block_m * block_n * dtype_bytes
+    return DOUBLE_BUFFER * (a_blk + b_blk) + acc + out
+
+
+def flash_vmem_bytes(block_q: int, block_kv: int, head_dim: int,
+                     dtype_bytes: int = 2) -> int:
+    """VMEM working set of kernels/flash_attention: q block + double-buffered
+    k/v blocks + (m, l, acc) f32 scratch + the f32 score tile + output."""
+    q_blk = block_q * head_dim * dtype_bytes
+    kv_blk = 2 * block_kv * head_dim * dtype_bytes
+    scratch = block_q * head_dim * 4 + 2 * block_q * 4
+    scores = block_q * block_kv * 4
+    out = block_q * head_dim * dtype_bytes
+    return q_blk + DOUBLE_BUFFER * kv_blk + scratch + scores + out
+
+
+def matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
+                      dtype_bytes: int = 2,
+                      max_candidates: int | None = None
+                      ) -> List[Tuple[int, int, int]]:
+    """All (block_m, block_n, block_k) worth timing for an (m, k, n) GEMM.
+
+    Every candidate is tile-aligned (block_m % sublane == 0, block_n and
+    block_k % lane == 0) and fits the VMEM budget.  The default 128^3 config
+    is always present (it is the baseline the measured speedup is quoted
+    against).  Candidates are ordered largest-first: bigger blocks amortize
+    more grid overhead and are usually the winners on real hardware.
+    """
+    hw = hw or get_hardware()
+    sub = sublane_granule(hw, dtype_bytes)
+    lane = lane_granule(hw)
+    # block_m starts at the MXU row count if the problem allows: sub-MXU
+    # blocks only make sense for skinny problems.
+    m_steps = [s for s in _steps(m, sub) if s >= min(128, round_up(m, sub))]
+    m_steps = m_steps or _steps(m, sub)[-1:]
+    n_steps = _steps(n, lane)
+    k_steps = _steps(k, lane)
+    cands = [
+        (bm, bn, bk)
+        for bm in m_steps
+        for bn in n_steps
+        for bk in k_steps
+        if matmul_vmem_bytes(bm, bn, bk, dtype_bytes) <= hw.sram_bytes
+    ]
+    cands.sort(key=lambda c: -(c[0] * c[1] * c[2]))
+    default = (128, 128, 128)
+    if default not in cands and matmul_vmem_bytes(*default, dtype_bytes) <= hw.sram_bytes:
+        cands.append(default)
+    if max_candidates is not None and len(cands) > max_candidates:
+        keep = cands[:max_candidates]
+        if default in cands and default not in keep:
+            keep[-1] = default
+        cands = keep
+    return cands
+
+
+def flash_candidates(seq_q: int, seq_kv: int, head_dim: int,
+                     hw: Hardware | None = None, dtype_bytes: int = 2,
+                     max_candidates: int | None = None
+                     ) -> List[Tuple[int, int]]:
+    """All (block_q, block_kv) worth timing for a flash-attention problem.
+
+    block_q is sublane-aligned, block_kv lane-aligned (the (block_q,
+    block_kv) score tile feeds the MXU), and the streaming working set must
+    fit VMEM.  The 128x128 default is always included.
+    """
+    hw = hw or get_hardware()
+    sub = sublane_granule(hw, dtype_bytes)
+    lane = lane_granule(hw)
+    q_steps = [s for s in _steps(seq_q, sub) if s >= min(128, round_up(seq_q, sub))]
+    q_steps = q_steps or _steps(seq_q, sub)[-1:]
+    kv_steps = _steps(seq_kv, lane)
+    cands = [
+        (bq, bkv)
+        for bq in q_steps
+        for bkv in kv_steps
+        if flash_vmem_bytes(bq, bkv, head_dim, dtype_bytes) <= hw.sram_bytes
+    ]
+    cands.sort(key=lambda c: -(c[0] * c[1]))
+    default = (128, 128)
+    if default not in cands and flash_vmem_bytes(*default, head_dim, dtype_bytes) <= hw.sram_bytes:
+        cands.append(default)
+    if max_candidates is not None and len(cands) > max_candidates:
+        keep = cands[:max_candidates]
+        if default in cands and default not in keep:
+            keep[-1] = default
+        cands = keep
+    return cands

@@ -1,0 +1,31 @@
+"""Wall-clock measurement for autotuning and benchmarks.
+
+This is the single timing primitive for the repo: `benchmarks/common.py`
+delegates here so the autotuner and the benchmark harness measure the same
+way.  On this CPU container, Pallas kernels run in interpret mode and the
+numbers rank candidates *relatively*; on a real TPU the same code times the
+compiled kernels and the cache entries become deployment-grade.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def wall_us(fn: Callable, *args, iters: int = 5, warmup: int = 2,
+            jit: bool = True) -> float:
+    """Mean wall time of `fn(*args)` in microseconds, after `warmup` calls.
+
+    `fn` is jitted by default (pass jit=False for already-jitted callables or
+    functions that must not be traced twice)."""
+    f = jax.jit(fn) if jit else fn
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(max(iters, 1)):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / max(iters, 1) * 1e6

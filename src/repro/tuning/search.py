@@ -1,0 +1,139 @@
+"""Measured block-size search for the Pallas kernels.
+
+For each problem shape the search sweeps the tile-aligned candidate lattice
+(`tuning.candidates`), times every candidate with `tuning.measure.wall_us`,
+and records the winner in a `TuningCache` — the measured counterpart of the
+analytic model in `core.gemm_model`.  Kernel wrappers then consult the cache
+via `tuned=True`, and `core.gemm_model.MeasuredProfile` uses the same
+entries to calibrate advisor predictions.
+
+On CPU the kernels run in Pallas interpret mode: absolute times are not
+TPU times, but the *relative* ranking across block shapes still reflects
+blocking/padding work, and the full loop (search -> cache -> tuned dispatch
+-> calibrated advisor) is exercised end to end.  On a TPU host, pass
+interpret=False and the cache holds real hardware timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.hardware import Hardware, get_hardware
+from .cache import TunedConfig, TuningCache, get_default_cache
+from .candidates import flash_candidates, matmul_candidates
+from .measure import wall_us
+
+DEFAULT_MATMUL_BLOCKS = (128, 128, 128)
+DEFAULT_FLASH_BLOCKS = (128, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class Trial:
+    blocks: Tuple[int, ...]
+    time_us: float
+
+
+def flash_op_name(causal: bool) -> str:
+    return "flash_attention_causal" if causal else "flash_attention_full"
+
+
+def _dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def autotune_matmul(m: int, k: int, n: int, *, dtype=jnp.float32,
+                    hw: Optional[Hardware] = None,
+                    cache: Optional[TuningCache] = None,
+                    interpret: bool = True, iters: int = 3, warmup: int = 1,
+                    max_candidates: Optional[int] = None,
+                    verbose: bool = False) -> TunedConfig:
+    """Sweep (block_m, block_n, block_k) for an (m, k, n) matmul; persist
+    and return the measured winner.  `cache=None` uses the default cache."""
+    from ..kernels.matmul.ops import matmul
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    cands = matmul_candidates(m, k, n, hw, dtype_bytes,
+                              max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k)).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n)).astype(dtype)
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bm, bn, bk in cands:
+        t = wall_us(
+            lambda a, b, bm=bm, bn=bn, bk=bk: matmul(
+                a, b, block_m=bm, block_n=bn, block_k=bk,
+                interpret=interpret),
+            a, b, iters=iters, warmup=warmup, jit=False)
+        trials.append(Trial((bm, bn, bk), t))
+        if (bm, bn, bk) == DEFAULT_MATMUL_BLOCKS:
+            baseline_us = t
+        if verbose:
+            print(f"  matmul {m}x{k}x{n} blocks=({bm},{bn},{bk}): {t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op="matmul", shape=(m, k, n), dtype=_dtype_name(dtype),
+        hw_name=hw.name,
+        blocks={"block_m": best.blocks[0], "block_n": best.blocks[1],
+                "block_k": best.blocks[2]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials))
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_flash_attention(batch: int, seq: int, heads: int, head_dim: int,
+                             *, seq_kv: Optional[int] = None,
+                             causal: bool = True, dtype=jnp.float32,
+                             hw: Optional[Hardware] = None,
+                             cache: Optional[TuningCache] = None,
+                             interpret: bool = True, iters: int = 3,
+                             warmup: int = 1,
+                             max_candidates: Optional[int] = None,
+                             verbose: bool = False) -> TunedConfig:
+    """Sweep (block_q, block_kv) for a (batch, seq, heads, head_dim)
+    attention problem; persist and return the measured winner."""
+    from ..kernels.flash_attention.ops import flash_attention
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    seq_kv = seq_kv or seq
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    cands = flash_candidates(seq, seq_kv, head_dim, hw, dtype_bytes,
+                             max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (batch, seq, heads, head_dim)).astype(dtype)
+    kv_shape = (batch, seq_kv, heads, head_dim)
+    k = jax.random.normal(jax.random.fold_in(key, 1), kv_shape).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), kv_shape).astype(dtype)
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bq, bkv in cands:
+        t = wall_us(
+            lambda q, k, v, bq=bq, bkv=bkv: flash_attention(
+                q, k, v, causal=causal, block_q=bq, block_kv=bkv,
+                interpret=interpret),
+            q, k, v, iters=iters, warmup=warmup, jit=False)
+        trials.append(Trial((bq, bkv), t))
+        if (bq, bkv) == DEFAULT_FLASH_BLOCKS:
+            baseline_us = t
+        if verbose:
+            print(f"  flash b{batch} s{seq} a{heads} d{head_dim} "
+                  f"blocks=({bq},{bkv}): {t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op=flash_op_name(causal),
+        shape=(batch, seq, seq_kv, heads, head_dim),
+        dtype=_dtype_name(dtype), hw_name=hw.name,
+        blocks={"block_q": best.blocks[0], "block_kv": best.blocks[1]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials))
+    cache.put(cfg)
+    return cfg

@@ -1,8 +1,8 @@
-"""Render EXPERIMENTS.md from the dry-run / perf JSONL artifacts.
+"""Render EXPERIMENTS.md from the dry-run / perf / serving JSONL artifacts.
 
     PYTHONPATH=src python -m benchmarks.report \
         --dryrun dryrun_results.jsonl --perf perf_qwen.jsonl perf_whisper.jsonl \
-        perf_deepseek.jsonl --out EXPERIMENTS.md
+        perf_deepseek.jsonl --serve serve_engine.jsonl --out EXPERIMENTS.md
 """
 import argparse
 import json
@@ -176,10 +176,45 @@ def perf_section(perf_rows_by_cell):
     return out
 
 
+def serve_section(rows):
+    """Serving-engine latency report: aggregate tok/s is not the whole
+    story — per-request TTFT and inter-token percentiles are what a serving
+    SLO is written against, so they ride alongside (p50/p99)."""
+    out = ["## §Serving", "",
+           "Continuous-batching engine vs static batching "
+           "(`benchmarks/serve_engine.py`, CPU smoke scale; both policies "
+           "share jitted programs + slot pool, only the scheduler differs — "
+           "see docs/serving-guide.md).  `steps` counts pool-wide decode "
+           "steps: static pays for dead slots riding to each batch max.", ""]
+    out.append("| pattern | policy | tok/s | TTFT p50 ms | TTFT p99 ms | "
+               "ITL p50 ms | ITL p99 ms | decode steps |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        out.append(
+            f"| {r['pattern']} | {r['policy']} | {r['tok_s']:.1f} | "
+            f"{r['ttft_p50_s']*1e3:.1f} | {r['ttft_p99_s']*1e3:.1f} | "
+            f"{r['itl_p50_s']*1e3:.1f} | {r['itl_p99_s']*1e3:.1f} | "
+            f"{r['decode_steps']} |")
+    out.append("")
+    by_pat = defaultdict(dict)
+    for r in rows:
+        by_pat[r["pattern"]][r["policy"]] = r
+    gains = [(p, d["continuous"]["tok_s"] / d["static"]["tok_s"])
+             for p, d in by_pat.items()
+             if "continuous" in d and "static" in d and d["static"]["tok_s"]]
+    if gains:
+        out.append("**Continuous vs static aggregate tok/s:** "
+                   + ", ".join(f"{p} {g:.2f}x" for p, g in gains) + ".")
+        out.append("")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", default="dryrun_results.jsonl")
     ap.add_argument("--perf", nargs="*", default=[])
+    ap.add_argument("--serve", default=None,
+                    help="serve_engine.jsonl from benchmarks.serve_engine")
     ap.add_argument("--out", default="EXPERIMENTS.md")
     args = ap.parse_args()
 
@@ -191,10 +226,13 @@ def main():
 
     lines = ["# EXPERIMENTS", "",
              "Generated by `python -m benchmarks.report` from "
-             "dryrun_results.jsonl / perf_*.jsonl (regenerate any time).", ""]
+             "dryrun_results.jsonl / perf_*.jsonl / serve_engine.jsonl "
+             "(regenerate any time).", ""]
     lines += dryrun_section(dry)
     lines += roofline_section(dry)
     lines += perf_section(perf)
+    if args.serve:
+        lines += serve_section(_load(args.serve))
     with open(args.out, "w") as f:
         f.write("\n".join(lines))
     print(f"wrote {args.out} ({len(lines)} lines)")

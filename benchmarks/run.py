@@ -19,6 +19,7 @@ MODULES = [
     "pythia_inference",      # Fig. 13
     "dimension_order",       # Fig. 14
     "autotune_sweep",        # beyond-paper: measured block-size search
+    "serve_engine",          # beyond-paper: continuous batching vs static
 ]
 
 

@@ -1,5 +1,5 @@
-"""Batched serving example: prefill a batch of prompts and decode with the
-production cache layout (the decode_32k dry-run path, at CPU scale).
+"""Serving example: the static batch loop, then the continuous-batching
+engine on the same architecture (CPU smoke scale).
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -10,7 +10,15 @@ sys.path.insert(0, "src")
 from repro.launch import serve as serve_driver
 
 if __name__ == "__main__":
+    print("== static batch (baseline) ==")
     serve_driver.main([
         "--arch", "internlm2-1.8b", "--smoke",
         "--batch", "8", "--prompt-len", "64", "--gen", "32",
+    ])
+    print()
+    print("== continuous-batching engine ==")
+    serve_driver.main([
+        "--arch", "internlm2-1.8b", "--smoke", "--engine",
+        "--batch", "8", "--prompt-len", "64", "--gen", "32",
+        "--requests", "16", "--arrival", "uniform",
     ])

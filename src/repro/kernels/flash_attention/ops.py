@@ -12,6 +12,7 @@ exact problem before falling back to the 128x128 default — see
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -21,7 +22,8 @@ from ...core.hardware import get_hardware
 from ...core.quantization import round_up
 from ...tuning.cache import lookup as _tuning_lookup
 from .kernel import flash_attention_pallas
-from .ref import attention_ref
+from .paged import paged_decode_pallas
+from .ref import attention_ref, paged_decode_ref
 
 
 def _fold(x):
@@ -82,5 +84,69 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
             block_q = cfg.blocks["block_q"]
             block_kv = cfg.blocks["block_kv"]
     return _flash_jit(q, k, v, causal=causal, block_q=block_q,
+                      block_kv=block_kv, interpret=interpret,
+                      use_pallas=use_pallas)
+
+
+# --- paged decode (serving engine) ---------------------------------------------------
+
+# In-model kernel dispatch (models.attention attn_impl="paged") has no
+# per-call interpret kwarg to thread, so it follows this env toggle: the
+# default True matches the CPU container; a TPU deployment exports
+# REPRO_KERNEL_INTERPRET=0 to run the compiled kernel.
+ENV_INTERPRET = "REPRO_KERNEL_INTERPRET"
+
+
+def default_interpret() -> bool:
+    return os.environ.get(ENV_INTERPRET, "1") != "0"
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret",
+                                             "use_pallas"))
+def _paged_jit(q, k_pool, v_pool, slot_idx, lengths, *, block_kv: int,
+               interpret: bool, use_pallas: bool):
+    if not use_pallas:
+        return paged_decode_ref(q, k_pool, v_pool, slot_idx, lengths)
+    s_max = k_pool.shape[1]
+    bkv = min(block_kv, s_max)
+    if s_max % bkv:
+        # clamp to a divisor rather than padding: a pad would copy the whole
+        # pool inside the decode program, every layer, every step.  Pool
+        # depths are lane-aligned and block_kv candidates are lane
+        # multiples, so the gcd stays a healthy tile-aligned block.
+        import math
+        g = math.gcd(s_max, bkv)
+        if g >= 16:
+            bkv = g
+        else:  # pathological caller shapes only: pad once here
+            pad = round_up(s_max, bkv) - s_max
+            k_pool = jnp.pad(k_pool, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_pool = jnp.pad(v_pool, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return paged_decode_pallas(q, k_pool, v_pool, slot_idx, lengths,
+                               block_kv=bkv, interpret=interpret)
+
+
+def paged_decode(q, k_pool, v_pool, slot_idx, lengths, *,
+                 block_kv: int = 128, interpret: bool = True,
+                 use_pallas: bool = True, tuned: bool = False,
+                 hw_name: Optional[str] = None):
+    """Slot-gathering decode attention over a fixed KV pool.
+
+    q: (b, a, d) — one query token per active request row; k_pool, v_pool:
+    (slots, s_max, nkv, d); slot_idx: (b,) row->slot; lengths: (b,) live kv
+    entries (0 = dead slot -> zero output).  Returns (b, a, d).
+
+    tuned=True overrides block_kv with the autotuning cache's measured-best
+    for this pool shape (op "paged_decode") when one exists — see
+    `repro.tuning.search.autotune_paged_decode`.
+    """
+    if tuned and use_pallas:
+        b, a, d = q.shape
+        slots, s_max, nkv, _ = k_pool.shape
+        cfg = _tuning_lookup("paged_decode", (b, slots, s_max, nkv, a, d),
+                             jnp.dtype(q.dtype).name,
+                             hw_name or get_hardware().name)
+        if cfg is not None:
+            block_kv = cfg.blocks["block_kv"]
+    return _paged_jit(q, k_pool, v_pool, slot_idx, lengths,
                       block_kv=block_kv, interpret=interpret,
                       use_pallas=use_pallas)

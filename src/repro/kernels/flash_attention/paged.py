@@ -1,0 +1,120 @@
+"""Paged/slotted decode-attention Pallas TPU kernel for the serving engine.
+
+One query token per request row, K/V read from a fixed pool of cache slots
+(`serving.engine.kv_pool.SlotPool`).  The slot mapping and per-slot lengths
+ride in as scalar-prefetch operands (`pltpu.PrefetchScalarGridSpec`), so the
+K/V BlockSpec index maps *gather by slot index*: row b's kv blocks come from
+pool slot `slot_idx[b]` — the Pallas analogue of vLLM's paged attention at
+page size = one whole slot.
+
+Grid (b, kv_heads, kv_steps), kv innermost; VMEM scratch carries the online
+softmax state (m, l, acc) across kv steps (TPU grids are sequential per
+core).  Per-slot lengths do double duty:
+  * kv blocks entirely past `lengths[b]` are skipped via pl.when — a dead
+    slot (length 0) costs zero FLOPs and writes zeros;
+  * the tail block is masked elementwise so slot-pool positions past the
+    sequence's live prefix (stale data from a previous occupant) never
+    contribute.
+
+The score tile is (g, block_kv) where g = query heads per kv head: decode
+works at tiny sublane occupancy by construction (the paper's skinny-GEMM
+regime); block_kv is the lane-side knob the autotuner sweeps
+(`tuning.search.autotune_paged_decode`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, kv_steps: int, block_kv: int,
+                  scale: float):
+    b_i, ki = pl.program_id(0), pl.program_id(2)
+    length = len_ref[b_i]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip blocks wholly past the live prefix (dead slot: skips everything)
+    @pl.when(ki * block_kv < length)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)    # (bkv, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)    # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        s = jnp.where(kv_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # dead slot -> zero output
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        slot_idx: jax.Array, lengths: jax.Array, *,
+                        block_kv: int = 128, scale: float | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """q: (b, a, d) one token per row; k_pool, v_pool: (slots, s_max, nkv, d);
+    slot_idx: (b,) int32 row->slot; lengths: (b,) int32 live kv per row.
+
+    Requires s_max % block_kv == 0 (ops.py clamps/pads) and a % nkv == 0.
+    Returns (b, a, d); rows with length 0 return zeros.
+    """
+    b, a, d = q.shape
+    slots, s_max, nkv, dk = k_pool.shape
+    assert d == dk and a % nkv == 0
+    assert s_max % block_kv == 0, (s_max, block_kv)
+    g = a // nkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kv_steps = s_max // block_kv
+    qh = q.reshape(b, nkv, g, d)
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nkv, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, h, j, slot, lens: (bi, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda bi, h, j, slot, lens: (slot[bi], j, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda bi, h, j, slot, lens: (slot[bi], j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, h, j, slot, lens: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, kv_steps=kv_steps,
+                          block_kv=block_kv, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        interpret=interpret,
+    )(slot_idx.astype(jnp.int32), lengths.astype(jnp.int32), qh,
+      k_pool, v_pool)
+    return out.reshape(b, a, d)

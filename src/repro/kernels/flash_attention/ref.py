@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the flash-attention kernel."""
+"""Pure-jnp oracles for the flash-attention and paged-decode kernels."""
 import jax
 import jax.numpy as jnp
 
@@ -21,3 +21,24 @@ def attention_ref(q, k, v, causal: bool = True, scale=None):
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_decode_ref(q, k_pool, v_pool, slot_idx, lengths, scale=None):
+    """q: (b, a, d); k_pool, v_pool: (slots, s_max, nkv, d); slot_idx: (b,)
+    row->slot gather; lengths: (b,) live kv entries per row (0 = dead slot,
+    returns zeros).  GQA via a % nkv == 0.  Returns (b, a, d)."""
+    b, a, d = q.shape
+    _, s_max, nkv, _ = k_pool.shape
+    g = a // nkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    k = k_pool[slot_idx].transpose(0, 2, 1, 3)  # (b, nkv, s_max, d)
+    v = v_pool[slot_idx].transpose(0, 2, 1, 3)
+    qh = q.reshape(b, nkv, g, d)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    live = jnp.arange(s_max)[None, :] < lengths[:, None]  # (b, s_max)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
+    return out.reshape(b, a, d).astype(q.dtype)

@@ -1,7 +1,17 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+"""Serving drivers: static batch (baseline) and the continuous-batching
+engine (`repro.serving.engine`).
+
+Static batch (the PR-1 behavior, kept as the baseline):
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+Continuous-batching engine — admits a synthetic request stream into a
+tile-aligned KV slot pool, reporting aggregate tok/s plus per-request TTFT
+and inter-token latency percentiles:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --engine --smoke --requests 12 --arrival uniform --gen 16
 """
 from __future__ import annotations
 
@@ -18,20 +28,10 @@ from ..models import init_lm
 from ..serving.serve_step import make_decode_step, make_prefill_step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    params = init_lm(jax.random.PRNGKey(args.seed), cfg)
+def run_static(cfg, params, args) -> None:
+    """Legacy static-batch greedy loop: one jit per (batch, s_max), slots
+    idle once a sequence finishes — the baseline the engine improves on."""
     s_max = args.prompt_len + args.gen
-
     prompts = jnp.asarray(synthetic_tokens(args.seed, 0, args.batch,
                                            args.prompt_len, cfg.vocab_size))
     batch = {"tokens": prompts}
@@ -64,6 +64,71 @@ def main(argv=None):
           f"{t_decode*1e3:.1f} ms "
           f"({(args.gen-1)*args.batch/max(t_decode,1e-9):,.0f} tok/s)")
     print("sample:", np.asarray(toks[0, :16]))
+
+
+def run_engine(cfg, params, args) -> None:
+    """Continuous-batching engine over a synthetic request stream."""
+    from ..serving.engine import Engine, synthetic_requests
+
+    eng = Engine(params, cfg, max_batch=args.batch,
+                 max_prompt=args.prompt_len, max_new=args.gen,
+                 use_paged_kernel=args.paged, grow_batch=args.grow_batch)
+    pol = eng.policy
+    print(f"bucket policy: {pol.num_slots} slots x {pol.seq_max} kv depth, "
+          f"prompt buckets {list(pol.prompt_buckets)} "
+          f"(<= {pol.num_programs} lowered programs)")
+
+    # compile warmup + one decode-step timing, so arrival patterns are
+    # expressed in machine-relative units
+    step_s = eng.calibrate_step_s()
+
+    reqs = synthetic_requests(
+        args.requests, pattern=args.arrival, min_prompt=4,
+        max_prompt=args.prompt_len, min_new=max(args.gen // 4, 1),
+        max_new=args.gen, vocab=cfg.vocab_size, step_s=step_s,
+        temperature=args.temperature, seed=args.seed)
+    done, stats = eng.run(reqs)
+
+    print(f"served {stats.num_requests} requests "
+          f"({stats.total_generated} tokens) in {stats.wall_s*1e3:.0f} ms "
+          f"| {stats.prefills} prefills, {stats.decode_steps} decode steps")
+    print(f"aggregate: {stats.tok_s:,.1f} tok/s")
+    print(f"TTFT:       p50 {stats.ttft_p50_s*1e3:8.1f} ms   "
+          f"p99 {stats.ttft_p99_s*1e3:8.1f} ms")
+    print(f"inter-token p50 {stats.itl_p50_s*1e3:8.1f} ms   "
+          f"p99 {stats.itl_p99_s*1e3:8.1f} ms")
+    print("sample:", done[0].tokens[:16])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine instead of the static "
+                         "batch loop")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    # engine-only knobs
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--arrival", default="uniform",
+                    choices=("burst", "uniform", "bursty", "longtail"))
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="decode attention via the Pallas paged kernel")
+    ap.add_argument("--grow-batch", action="store_true",
+                    help="let the advisor grow the slot bucket when the "
+                         "calibrated model predicts enough amortization")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_lm(jax.random.PRNGKey(args.seed), cfg)
+    if args.engine:
+        run_engine(cfg, params, args)
+    else:
+        run_static(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -44,7 +44,9 @@ def _sdpa(q, k, v, causal: bool, q_pos=None, kv_len=None,
 
     q: (b, sq, a, hd); k, v: (b, skv, kv, hd).  GQA: a % kv == 0.
     q_pos: (sq,) absolute positions of the queries (for causal masking
-    against a cache); kv_len: number of valid cache entries (scalar).
+    against a cache), or (b, sq) per-row positions (serving-engine slots at
+    heterogeneous depths); kv_len: number of valid cache entries (scalar, or
+    (b,) per-row).
 
     seq_sharded (decode): anchors K/V and the score matrix sequence-sharded
     on the model axis — the softmax then reduces over a sharded dim, which
@@ -63,17 +65,22 @@ def _sdpa(q, k, v, causal: bool, q_pos=None, kv_len=None,
     if seq_sharded:
         scores = constrain(scores, "bkgqs")
     scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    kv_pos = jnp.arange(skv)
+    mask = None  # (B, sq, skv) with B in {1, b}, broadcast over head dims
     if causal:
         if q_pos is None:
             q_pos = jnp.arange(sq)
-        kv_pos = jnp.arange(skv)
-        mask = kv_pos[None, :] <= q_pos[:, None]  # (sq, skv)
-        if kv_len is not None:
-            mask = mask & (kv_pos[None, :] < kv_len)
-        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
-    elif kv_len is not None:
-        mask = jnp.arange(skv)[None, :] < kv_len
-        scores = jnp.where(mask[None, None, None, None], scores, NEG_INF)
+        if q_pos.ndim == 1:
+            mask = (kv_pos[None, :] <= q_pos[:, None])[None]
+        else:  # per-row query positions
+            mask = kv_pos[None, None, :] <= q_pos[:, :, None]
+    if kv_len is not None:
+        kvl = jnp.asarray(kv_len)
+        live = (kv_pos[None, :] < kvl[:, None])[:, None, :] if kvl.ndim \
+            else (kv_pos < kvl)[None, None, :]
+        mask = live if mask is None else mask & live
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
     return out.reshape(b, sq, a, v.shape[-1])  # v head dim may differ (MLA)
@@ -84,7 +91,10 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
     """x: (b, s, h).  Returns (out, new_cache).
 
     cache: dict(k=(b, s_max, kv, hd), v=...) or None.
-    cache_index: scalar write offset for decode.
+    cache_index: write offset for decode — a scalar, or a (b,) vector of
+    per-row offsets (serving engine: each cache slot at its own depth; the
+    write is then a per-row one-hot scatter and requires s == 1, and
+    `positions` should be the matching (b, s) per-row positions).
     kv_input: if set, keys/values come from this tensor (cross-attention).
     """
     b, s, h = x.shape
@@ -106,18 +116,37 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
     new_cache = None
     kv_len = None
     if cache is not None and kv_input is None:
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        ci = jnp.asarray(cache_index)
+        if ci.ndim:  # per-row write positions (serving-engine slot pool)
+            assert s == 1, "vector cache_index requires single-token decode"
+            write = jnp.arange(cache["k"].shape[1]) == ci[:, None]  # (b, s_max)
+            sel = write[:, :, None, None]
+            k = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+            v = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
         new_cache = {"k": k, "v": v}
-        kv_len = cache_index + s
-    q_pos = positions[0] if positions.ndim > 1 else positions
+        kv_len = ci + s
+    # 2-D positions are per-row query positions; _sdpa masks them row-wise
+    q_pos = positions
     is_decode = cache is not None and s == 1
-    if cfg.attn_impl == "blocked" and not is_decode:
+    if cfg.attn_impl == "paged" and is_decode:
+        # Pallas paged decode over the slot pool (identity slot map here;
+        # the kernel's gather-by-slot path is exercised by the engine tests)
+        from ..kernels.flash_attention.ops import (default_interpret,
+                                                   paged_decode)
+        lengths = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+        out = paged_decode(q[:, 0], k.astype(q.dtype), v.astype(q.dtype),
+                           jnp.arange(b, dtype=jnp.int32), lengths,
+                           tuned=True,
+                           interpret=default_interpret())[:, None]
+    elif cfg.attn_impl == "blocked" and not is_decode:
         from .blocked_attention import blocked_sdpa
         out = blocked_sdpa(q, k.astype(q.dtype), v.astype(q.dtype),
                            causal=causal and kv_input is None,
-                           q_pos=q_pos, kv_len=kv_len,
-                           block_kv=cfg.attn_block_kv)
+                           q_pos=q_pos if q_pos.ndim == 1 else q_pos[0],
+                           kv_len=kv_len, block_kv=cfg.attn_block_kv)
     else:
         out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype),
                     causal=causal and kv_input is None,

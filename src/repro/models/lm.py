@@ -121,10 +121,13 @@ def apply_lm(params, tokens, cfg: ModelConfig, *,
     x = constrain(x, "btd")
 
     if positions is None:
-        start = 0 if cache_index is None else cache_index
-        positions = start + jnp.arange(s)
+        start = jnp.asarray(0 if cache_index is None else cache_index)
+        # vector cache_index (serving engine): per-row (b, s) positions
+        positions = (start[:, None] + jnp.arange(s)[None] if start.ndim
+                     else start + jnp.arange(s))
     if cfg.pos_emb == "learned":
-        x = x + params["pos_embed"][positions].astype(dt)[None]
+        pe = params["pos_embed"][positions].astype(dt)
+        x = x + (pe if positions.ndim > 1 else pe[None])
 
     if cfg.is_encoder_decoder and enc_out is None:
         assert encoder_frames is not None, "whisper needs encoder frames"

@@ -1,0 +1,21 @@
+"""Continuous-batching serving engine with tile-aligned bucketed KV caches.
+
+Public surface:
+  Engine                  — the serving loop (engine.py)
+  Request / SamplingParams / Completion / EngineStats — request API
+  BucketPolicy / make_policy — tile-aligned shape policy (buckets.py)
+  SlotPool                — fixed KV slot pool (kv_pool.py)
+  synthetic_requests      — workload generator shared with benchmarks
+"""
+from .buckets import BucketPolicy, make_policy
+from .engine import Engine
+from .kv_pool import SlotPool
+from .request import Completion, EngineStats, Request, SamplingParams
+from .scheduler import RequestQueue, Scheduler
+from .workload import PATTERNS, synthetic_requests
+
+__all__ = [
+    "Engine", "Request", "SamplingParams", "Completion", "EngineStats",
+    "BucketPolicy", "make_policy", "SlotPool", "RequestQueue", "Scheduler",
+    "PATTERNS", "synthetic_requests",
+]

@@ -1,0 +1,297 @@
+"""Continuous-batching serving engine over a tile-aligned KV slot pool.
+
+One `Engine` owns: the bucket policy (shapes snapped to the hardware tile
+lattice — `buckets`), a fixed `SlotPool` of KV cache slots, and a bounded
+set of jitted programs:
+
+  * one prefill program per prompt bucket — a single request, right-padded
+    to the bucket, cache written at positions 0..bucket (the pad tail is
+    dead weight masked by the slot length everywhere downstream);
+  * ONE decode program for the whole pool — every step advances all slots
+    one token with per-slot write positions (vector cache_index) and
+    per-slot causal masks; dead slots ride along masked;
+  * a sampling program (greedy + temperature with per-request PRNG streams).
+
+The host loop interleaves admission (prefill into freed slots) with pool
+decode steps — continuous batching.  `policy="static"` runs the same
+machinery but only refills the pool once it has fully drained, which is the
+static-batch baseline the benchmarks compare against.
+
+Per-request timing (TTFT, inter-token gaps) is recorded on the engine clock
+and aggregated by `request.EngineStats`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...configs.base import ModelConfig
+from ...core.hardware import Hardware, get_hardware
+from ...models import apply_lm, init_caches
+from ...models.layers import compute_dtype
+from .buckets import BucketPolicy, make_policy
+from .kv_pool import SlotPool
+from .request import Completion, EngineStats, Request
+from .scheduler import RequestQueue, Scheduler
+
+
+def _check_supported(cfg: ModelConfig) -> None:
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"engine v1 serves attention-based decoders (dense/moe); "
+            f"got family={cfg.family!r}")
+    if cfg.attn_type != "gqa":
+        raise NotImplementedError("engine v1 requires attn_type='gqa' "
+                                  "(MLA latent caches: future work)")
+    if cfg.pos_emb != "rotary":
+        raise NotImplementedError("engine v1 requires rotary positions")
+    if cfg.is_encoder_decoder or cfg.num_patches:
+        raise NotImplementedError("engine v1 serves text-only decoders")
+
+
+def _make_prefill(cfg: ModelConfig, s_max: int):
+    """(params, tokens (1, bucket), true_len) -> (logits (1, v), caches).
+
+    Logits are gathered at the last *real* prompt position; cache entries
+    past true_len hold pad garbage that per-slot lengths mask downstream.
+    """
+
+    def prefill(params, tokens, true_len):
+        caches = init_caches(cfg, 1, s_max, compute_dtype(cfg.dtype))
+        logits, caches, _ = apply_lm(params, tokens, cfg, caches=caches,
+                                     cache_index=0)
+        last = jax.lax.dynamic_slice_in_dim(logits, true_len - 1, 1, axis=1)
+        return last[:, 0], caches
+
+    return jax.jit(prefill)
+
+
+def _make_decode(cfg: ModelConfig):
+    """(params, tok (slots, 1), caches, pos (slots,)) -> (logits, caches).
+
+    pos is the per-slot write position (== live kv length); the KV pool is
+    donated so every step updates the cache buffers in place.
+    """
+
+    def decode(params, tok, caches, pos):
+        logits, caches, _ = apply_lm(params, tok, cfg, caches=caches,
+                                     cache_index=pos, decode=True)
+        return logits[:, -1], caches
+
+    return jax.jit(decode, donate_argnums=(2,))
+
+
+def _make_sampler():
+    """(logits (n, v), temps, seeds, steps) -> tokens (n,) int32.
+
+    temperature 0 -> argmax; else categorical with key fold_in(seed, step),
+    so a request's sample stream is independent of slot placement and step
+    timing (reproducible across scheduling policies).
+    """
+
+    def sample(logits, temps, seeds, steps):
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+
+        def one(lg, t, sd, st):
+            key = jax.random.fold_in(jax.random.PRNGKey(sd), st)
+            return jax.random.categorical(
+                key, lg / jnp.maximum(t, 1e-6)).astype(jnp.int32)
+
+        sampled = jax.vmap(one)(logits, temps, seeds, steps)
+        return jnp.where(temps > 0, sampled, greedy)
+
+    return jax.jit(sample)
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    generated: List[int]
+    last_t_s: float            # engine-clock time of the latest token
+    first_token_s: float
+    itl_s: List[float]
+
+
+class Engine:
+    """Continuous-batching engine; see module docstring."""
+
+    def __init__(self, params, cfg: ModelConfig, *,
+                 max_batch: int = 8, max_prompt: int = 64,
+                 max_new: int = 64, hw: Optional[Hardware] = None,
+                 policy: Optional[BucketPolicy] = None,
+                 use_paged_kernel: bool = False,
+                 grow_batch: bool = False):
+        _check_supported(cfg)
+        if use_paged_kernel:
+            cfg = dataclasses.replace(cfg, attn_impl="paged")
+        self.params = params
+        self.cfg = cfg
+        hw = hw or get_hardware()
+        self.policy = policy or make_policy(
+            cfg, hw, max_batch=max_batch, max_prompt=max_prompt,
+            max_seq=max_prompt + max_new, grow_batch=grow_batch)
+        self.pool = SlotPool(cfg, self.policy.num_slots, self.policy.seq_max,
+                             compute_dtype(cfg.dtype))
+        self._prefills = {b: _make_prefill(cfg, self.policy.seq_max)
+                          for b in self.policy.prompt_buckets}
+        self._decode = _make_decode(cfg)
+        self._sample = _make_sampler()
+        # per-slot device-facing state (dead slots: token 0, temp 0)
+        n = self.policy.num_slots
+        self._last_tok = np.zeros(n, np.int32)
+        self._temps = np.zeros(n, np.float32)
+        self._seeds = np.zeros(n, np.int32)
+        self._steps = np.zeros(n, np.int32)
+        self.decode_steps = 0
+        self.prefills = 0
+
+    def reset_stats(self) -> None:
+        """Zero the step counters.  run() does this itself on entry, so the
+        counters (and EngineStats) are always per-run; kept public for
+        callers that read the counters between partial workloads."""
+        self.decode_steps = 0
+        self.prefills = 0
+
+    def calibrate_step_s(self) -> float:
+        """Warm every bucket's prefill + the pool decode program, then time
+        one decode step (used to express arrival patterns in machine-relative
+        units).  First run pays the compiles; the second is the timer."""
+        from .request import Request as _Req
+        # gen budget clamped so bucket-wide warm prompts still fit the pool
+        warm = [_Req(rid=i, tokens=np.full(b, 1, np.int32),
+                     max_new_tokens=min(4, max(self.policy.seq_max - b, 1)))
+                for i, b in enumerate(self.policy.prompt_buckets)]
+        self.run(warm)
+        _, stats = self.run(warm)
+        return stats.wall_s / max(stats.decode_steps, 1)
+
+    # -- admission -----------------------------------------------------------
+
+    def _validate(self, req: Request) -> int:
+        """Bucket lookup + depth check; raises ValueError on an inadmissible
+        request.  Called before a slot is committed so a bad request can
+        never leak a slot."""
+        bucket = self.policy.prompt_bucket(req.prompt_len)
+        if req.prompt_len + req.max_new_tokens > self.policy.seq_max:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + gen "
+                f"{req.max_new_tokens} exceeds pool depth "
+                f"{self.policy.seq_max}")
+        return bucket
+
+    def _admit(self, req: Request, slot: int,
+               states: Dict[int, _SlotState],
+               done: List[Completion]) -> None:
+        try:
+            bucket = self._validate(req)
+        except ValueError:
+            self.pool.release(slot)
+            raise
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :req.prompt_len] = req.tokens
+        logits, caches = self._prefills[bucket](
+            self.params, jnp.asarray(padded),
+            jnp.asarray(req.prompt_len, jnp.int32))
+        sp = req.sampling
+        tok = self._sample(
+            logits, jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.seed or req.rid], jnp.int32),
+            jnp.asarray([0], jnp.int32))
+        tok0 = int(np.asarray(tok)[0])
+        self.pool.write(slot, caches, req.prompt_len)
+        self.prefills += 1
+        t = self._now()
+        self._last_tok[slot] = tok0
+        self._temps[slot] = sp.temperature
+        self._seeds[slot] = sp.seed or req.rid
+        self._steps[slot] = 1
+        st = _SlotState(req=req, generated=[tok0], last_t_s=t,
+                        first_token_s=t, itl_s=[])
+        if self._finished(st):
+            self._complete(slot, st, states, done)
+        else:
+            states[slot] = st
+
+    def _finished(self, st: _SlotState) -> bool:
+        if len(st.generated) >= st.req.max_new_tokens:
+            return True
+        eos = st.req.eos_id
+        return eos is not None and st.generated[-1] == eos
+
+    def _complete(self, slot: int, st: _SlotState,
+                  states: Dict[int, _SlotState],
+                  done: List[Completion]) -> None:
+        done.append(Completion(
+            rid=st.req.rid, prompt_len=st.req.prompt_len,
+            tokens=st.generated, arrival_s=st.req.arrival_s,
+            first_token_s=st.first_token_s, done_s=self._now(),
+            itl_s=st.itl_s))
+        states.pop(slot, None)
+        self._temps[slot] = 0.0
+        self.pool.release(slot)
+
+    # -- main loop -----------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def run(self, requests: List[Request], *,
+            policy: str = "continuous") -> Tuple[List[Completion],
+                                                 EngineStats]:
+        """Serve `requests` to completion; returns (completions sorted by
+        request id, aggregate stats).  policy="static" = drain-then-refill
+        baseline (see scheduler.Scheduler)."""
+        for req in requests:
+            self._validate(req)  # fail fast, before any slot is committed
+        self.reset_stats()  # counters (and stats) are per-run
+        self._t0 = time.perf_counter()
+        queue = RequestQueue(requests)
+        sched = Scheduler(queue, self.pool, policy)
+        states: Dict[int, _SlotState] = {}
+        done: List[Completion] = []
+
+        while not sched.drained:
+            for req, slot in sched.admissions(self._now()):
+                self._admit(req, slot, states, done)
+            if not states:
+                nxt = queue.next_arrival_s()
+                if nxt is not None:
+                    time.sleep(max(nxt - self._now(), 0.0) + 1e-4)
+                continue
+            self._step(states, done)
+
+        wall = self._now()
+        done.sort(key=lambda c: c.rid)
+        return done, EngineStats.collect(done, wall,
+                                         decode_steps=self.decode_steps,
+                                         prefills=self.prefills)
+
+    def _step(self, states: Dict[int, _SlotState],
+              done: List[Completion]) -> None:
+        """One pool-wide decode step: every live slot advances one token."""
+        pos = np.asarray(self.pool.lengths, np.int32)
+        logits, caches = self._decode(
+            self.params, jnp.asarray(self._last_tok[:, None]),
+            self.pool.caches, jnp.asarray(pos))
+        self.pool.caches = caches
+        toks = np.asarray(self._sample(
+            logits, jnp.asarray(self._temps), jnp.asarray(self._seeds),
+            jnp.asarray(self._steps)))
+        self.decode_steps += 1
+        t = self._now()
+        for slot in list(states):
+            st = states[slot]
+            tok = int(toks[slot])
+            self.pool.lengths[slot] += 1
+            self._last_tok[slot] = tok
+            self._steps[slot] += 1
+            st.generated.append(tok)
+            st.itl_s.append(t - st.last_t_s)
+            st.last_t_s = t
+            if self._finished(st):
+                self._complete(slot, st, states, done)

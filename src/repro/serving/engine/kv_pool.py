@@ -1,0 +1,95 @@
+"""Fixed pool of KV-cache slots with tile-aligned (slots, seq_max) shape.
+
+The pool is the engine's only persistent device state: one cache pytree with
+batch dim = `num_slots` and sequence depth = `seq_max`, both snapped to the
+bucket lattice (`buckets.BucketPolicy`).  Requests borrow a slot for their
+lifetime; prefilled single-request caches are scattered into the pool at the
+slot index (donated, so the scatter is in-place on device), and a freed slot
+is simply marked length-0 — the stale bytes are masked by per-slot lengths
+everywhere downstream (decode masks, paged kernel) and overwritten by the
+next occupant's prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import ModelConfig
+from ...models import init_caches
+from ...models.blocks import stack_plan
+
+
+def _update(pool_leaf, new_leaf, slot, axis: int):
+    return jax.lax.dynamic_update_slice_in_dim(
+        pool_leaf, new_leaf.astype(pool_leaf.dtype), slot, axis=axis)
+
+
+def _write_segment(kind: str, pool_seg, new_seg, slot):
+    """Scatter one segment's single-request cache into the pool at `slot`.
+
+    Cache leaves carry the scanned layer dim first, so batch is axis 1 —
+    except the SSM states inside a hybrid superblock, which stack the
+    per-superblock sub-layers ahead of batch (axis 2); mirrors
+    models.blocks.init_cache_segment.
+    """
+    if kind == "hybrid_super":
+        return {
+            "ssm": jax.tree.map(lambda p, n: _update(p, n, slot, 2),
+                                pool_seg["ssm"], new_seg["ssm"]),
+            "shared_attn": jax.tree.map(lambda p, n: _update(p, n, slot, 1),
+                                        pool_seg["shared_attn"],
+                                        new_seg["shared_attn"]),
+        }
+    return jax.tree.map(lambda p, n: _update(p, n, slot, 1),
+                        pool_seg, new_seg)
+
+
+def make_slot_writer(cfg: ModelConfig):
+    """jit'd (pool_caches, new_caches, slot) -> pool_caches, donating the
+    pool so the scatter updates buffers in place."""
+    kinds = [kind for kind, _ in stack_plan(cfg)]
+
+    def write(pool_caches, new_caches, slot):
+        return [
+            _write_segment(kind, pool_seg, new_seg, slot)
+            for kind, pool_seg, new_seg in zip(kinds, pool_caches, new_caches)
+        ]
+
+    return jax.jit(write, donate_argnums=(0,))
+
+
+class SlotPool:
+    """Host-side slot bookkeeping + the device cache pytree."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, seq_max: int,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.seq_max = seq_max
+        self.caches = init_caches(cfg, num_slots, seq_max, dtype)
+        self.lengths = [0] * num_slots   # live kv entries per slot
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._writer = make_slot_writer(cfg)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_active(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    def write(self, slot: int, new_caches: Any, length: int) -> None:
+        """Install a prefilled batch-1 cache pytree into `slot`."""
+        self.caches = self._writer(self.caches, new_caches,
+                                   jnp.asarray(slot, jnp.int32))
+        self.lengths[slot] = length

@@ -1,0 +1,92 @@
+"""Request / completion dataclasses and latency accounting for the engine.
+
+A `Request` is what a client submits: prompt tokens, a generation budget,
+sampling parameters, and (for offline replay) an arrival time on the
+engine's clock.  The engine hands back a `Completion` carrying the generated
+tokens plus the per-request latency trace the serving benchmarks aggregate:
+TTFT (arrival -> first generated token) and the inter-token gaps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature == 0 -> greedy argmax; > 0 -> softmax sampling with a
+    per-request PRNG stream (seeded by `seed`, folded with the step index,
+    so outputs are reproducible regardless of slot placement)."""
+    temperature: float = 0.0
+    seed: int = 0
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    sampling: SamplingParams = GREEDY
+    arrival_s: float = 0.0        # seconds on the engine clock (0 = at start)
+    eos_id: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.tokens))
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: List[int]             # generated tokens (first token included)
+    arrival_s: float
+    first_token_s: float          # engine-clock time of the first token
+    done_s: float
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    itl_s: List[float] = dataclasses.field(default_factory=list)
+
+
+def _pct(xs: Sequence[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate + percentile view over a batch of completions."""
+    wall_s: float
+    total_generated: int
+    num_requests: int
+    decode_steps: int
+    prefills: int
+    tok_s: float
+    ttft_p50_s: float
+    ttft_p99_s: float
+    itl_p50_s: float
+    itl_p99_s: float
+
+    @classmethod
+    def collect(cls, completions: Sequence[Completion], wall_s: float,
+                decode_steps: int = 0, prefills: int = 0) -> "EngineStats":
+        gen = sum(len(c.tokens) for c in completions)
+        ttfts = [c.ttft_s for c in completions]
+        itls = [d for c in completions for d in c.itl_s]
+        return cls(
+            wall_s=wall_s, total_generated=gen,
+            num_requests=len(completions), decode_steps=decode_steps,
+            prefills=prefills,
+            tok_s=gen / wall_s if wall_s > 0 else 0.0,
+            ttft_p50_s=_pct(ttfts, 50), ttft_p99_s=_pct(ttfts, 99),
+            itl_p50_s=_pct(itls, 50), itl_p99_s=_pct(itls, 99))
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)

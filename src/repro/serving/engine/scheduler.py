@@ -1,0 +1,72 @@
+"""Admission queue + slot scheduler for the continuous-batching engine.
+
+Two policies share the machinery:
+
+  * "continuous" — the engine's normal mode: any free slot is refilled the
+    moment a request has arrived, so prefill and decode interleave and a
+    finished sequence's slot goes straight back to work;
+  * "static" — the baseline the benchmarks compare against: a new batch is
+    admitted only once the pool has fully drained, i.e. classic static
+    batching where early finishers leave dead slots until the whole batch
+    completes (exactly the `launch/serve.py` greedy-loop behavior, expressed
+    through the same engine so the comparison isolates the scheduling
+    policy).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import List, Optional, Tuple
+
+from .kv_pool import SlotPool
+from .request import Request
+
+
+class RequestQueue:
+    """Arrival-ordered queue; `pop_ready` respects the engine clock."""
+
+    def __init__(self, requests=()):
+        self._q: List[Request] = sorted(
+            requests, key=lambda r: (r.arrival_s, r.rid))
+
+    def push(self, req: Request) -> None:
+        # keep the arrival-order invariant pop_ready/next_arrival_s rely on
+        bisect.insort(self._q, req, key=lambda r: (r.arrival_s, r.rid))
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def next_arrival_s(self) -> Optional[float]:
+        return self._q[0].arrival_s if self._q else None
+
+    def pop_ready(self, now_s: float) -> Optional[Request]:
+        if self._q and self._q[0].arrival_s <= now_s:
+            return self._q.pop(0)
+        return None
+
+
+class Scheduler:
+    """Decides which queued requests enter which slots at each engine tick."""
+
+    def __init__(self, queue: RequestQueue, pool: SlotPool,
+                 policy: str = "continuous"):
+        assert policy in ("continuous", "static"), policy
+        self.queue = queue
+        self.pool = pool
+        self.policy = policy
+
+    def admissions(self, now_s: float) -> List[Tuple[Request, int]]:
+        """(request, slot) pairs to prefill right now."""
+        if self.policy == "static" and self.pool.num_active:
+            return []
+        out: List[Tuple[Request, int]] = []
+        while self.pool.num_free:
+            req = self.queue.pop_ready(now_s)
+            if req is None:
+                break
+            slot = self.pool.alloc()
+            out.append((req, slot))
+        return out
+
+    @property
+    def drained(self) -> bool:
+        return not len(self.queue) and not self.pool.num_active

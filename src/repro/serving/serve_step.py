@@ -57,7 +57,9 @@ def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
     b, s0 = prompt.shape
     s_max = s_max or (s0 + num_tokens)
     prefill = jax.jit(make_prefill_step(cfg, s_max))
-    decode = jax.jit(make_decode_step(cfg))
+    # donate the caches: without it every decode step copies the whole KV
+    # cache (launch/serve.py already donated; this loop had not)
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
     logits, caches = prefill(params, {"tokens": prompt})
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out = [tok]

@@ -16,18 +16,20 @@ wrappers, which themselves import `tuning.cache` — eager import would cycle.
 """
 from .cache import (TunedConfig, TuningCache, cache_key, default_cache_path,
                     get_default_cache, lookup, set_default_cache)
-from .candidates import (flash_candidates, flash_vmem_bytes,
-                         matmul_candidates, matmul_vmem_bytes)
+from .candidates import (bucket_steps, flash_candidates, flash_vmem_bytes,
+                         matmul_candidates, matmul_vmem_bytes,
+                         paged_decode_candidates)
 from .measure import wall_us
 
 _SEARCH_EXPORTS = ("autotune_matmul", "autotune_flash_attention",
-                   "flash_op_name")
+                   "autotune_paged_decode", "flash_op_name")
 
 __all__ = [
     "TunedConfig", "TuningCache", "cache_key", "default_cache_path",
     "get_default_cache", "lookup", "set_default_cache",
-    "flash_candidates", "flash_vmem_bytes", "matmul_candidates",
-    "matmul_vmem_bytes", "wall_us", *_SEARCH_EXPORTS,
+    "bucket_steps", "flash_candidates", "flash_vmem_bytes",
+    "matmul_candidates", "matmul_vmem_bytes", "paged_decode_candidates",
+    "wall_us", *_SEARCH_EXPORTS,
 ]
 
 

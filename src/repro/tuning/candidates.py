@@ -55,6 +55,16 @@ def _steps(dim: int, granule: int, cap: int = MAX_BLOCK) -> List[int]:
     return out
 
 
+def bucket_steps(dim: int, granule: int, cap: int = MAX_BLOCK) -> List[int]:
+    """Public lattice for the serving engine's bucket policy: power-of-two
+    multiples of the hardware tile granule, up to (the padding of) `dim`.
+
+    The engine snaps batch/prompt buckets to this lattice so every lowered
+    program shape is tile-aligned and the jit program set is bounded —
+    the same lattice the autotuner sweeps (`_steps`)."""
+    return _steps(dim, granule, cap)
+
+
 def matmul_vmem_bytes(block_m: int, block_n: int, block_k: int,
                       dtype_bytes: int = 2) -> int:
     """VMEM working set of kernels/matmul: double-buffered A and B input
@@ -109,6 +119,33 @@ def matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
     cands.sort(key=lambda c: -(c[0] * c[1] * c[2]))
     default = (128, 128, 128)
     if default not in cands and matmul_vmem_bytes(*default, dtype_bytes) <= hw.sram_bytes:
+        cands.append(default)
+    if max_candidates is not None and len(cands) > max_candidates:
+        keep = cands[:max_candidates]
+        if default in cands and default not in keep:
+            keep[-1] = default
+        cands = keep
+    return cands
+
+
+def paged_decode_candidates(s_max: int, head_dim: int, group: int = 1,
+                            hw: Hardware | None = None, dtype_bytes: int = 2,
+                            max_candidates: int | None = None) -> List[int]:
+    """block_kv values worth timing for the paged decode kernel.
+
+    The score tile is (group, block_kv) with group = query heads per kv head,
+    so only the lane-side block is searchable; candidates are lane-aligned
+    and bounded by the streaming VMEM working set (the flash budget at
+    block_q = group).  The 128 default is always included."""
+    hw = hw or get_hardware()
+    lane = lane_granule(hw)
+    cands = [bkv for bkv in _steps(s_max, lane)
+             if flash_vmem_bytes(group, bkv, head_dim, dtype_bytes)
+             <= hw.sram_bytes]
+    cands.sort(key=lambda c: -c)
+    default = 128
+    if default not in cands and flash_vmem_bytes(
+            group, default, head_dim, dtype_bytes) <= hw.sram_bytes:
         cands.append(default)
     if max_candidates is not None and len(cands) > max_candidates:
         keep = cands[:max_candidates]

@@ -23,11 +23,13 @@ import jax.numpy as jnp
 
 from ..core.hardware import Hardware, get_hardware
 from .cache import TunedConfig, TuningCache, get_default_cache
-from .candidates import flash_candidates, matmul_candidates
+from .candidates import (flash_candidates, matmul_candidates,
+                         paged_decode_candidates)
 from .measure import wall_us
 
 DEFAULT_MATMUL_BLOCKS = (128, 128, 128)
 DEFAULT_FLASH_BLOCKS = (128, 128)
+DEFAULT_PAGED_BLOCK_KV = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +84,59 @@ def autotune_matmul(m: int, k: int, n: int, *, dtype=jnp.float32,
         hw_name=hw.name,
         blocks={"block_m": best.blocks[0], "block_n": best.blocks[1],
                 "block_k": best.blocks[2]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials))
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_paged_decode(batch: int, slots: int, s_max: int, kv_heads: int,
+                          heads: int, head_dim: int, *, dtype=jnp.float32,
+                          hw: Optional[Hardware] = None,
+                          cache: Optional[TuningCache] = None,
+                          interpret: bool = True, iters: int = 3,
+                          warmup: int = 1,
+                          max_candidates: Optional[int] = None,
+                          verbose: bool = False) -> TunedConfig:
+    """Sweep block_kv for the serving engine's paged decode kernel over a
+    (slots, s_max, kv_heads, head_dim) KV pool with `batch` active rows;
+    persist and return the measured winner (op "paged_decode")."""
+    from ..kernels.flash_attention.ops import paged_decode
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    g = heads // kv_heads
+    cands = paged_decode_candidates(s_max, head_dim, g, hw, dtype_bytes,
+                                    max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (batch, heads, head_dim)).astype(dtype)
+    pool_shape = (slots, s_max, kv_heads, head_dim)
+    kp = jax.random.normal(jax.random.fold_in(key, 1), pool_shape).astype(dtype)
+    vp = jax.random.normal(jax.random.fold_in(key, 2), pool_shape).astype(dtype)
+    slot_idx = jnp.arange(batch, dtype=jnp.int32) % slots
+    lengths = jnp.full((batch,), s_max, jnp.int32)
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bkv in cands:
+        t = wall_us(
+            lambda q, kp, vp, si, ln, bkv=bkv: paged_decode(
+                q, kp, vp, si, ln, block_kv=bkv, interpret=interpret),
+            q, kp, vp, slot_idx, lengths, iters=iters, warmup=warmup,
+            jit=False)
+        trials.append(Trial((bkv,), t))
+        if bkv == DEFAULT_PAGED_BLOCK_KV:
+            baseline_us = t
+        if verbose:
+            print(f"  paged b{batch} pool{slots}x{s_max} kv{kv_heads} "
+                  f"d{head_dim} block_kv={bkv}: {t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op="paged_decode",
+        shape=(batch, slots, s_max, kv_heads, heads, head_dim),
+        dtype=_dtype_name(dtype), hw_name=hw.name,
+        blocks={"block_kv": best.blocks[0]},
         time_us=best.time_us, baseline_us=baseline_us,
         candidates_tried=len(trials))
     cache.put(cfg)

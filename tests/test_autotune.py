@@ -147,6 +147,33 @@ class TestTunedDispatch:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=2e-4, rtol=2e-4)
 
+    def test_autotune_then_tuned_paged_decode_matches_ref(self):
+        from repro.kernels.flash_attention.ops import paged_decode
+        from repro.kernels.flash_attention.ref import paged_decode_ref
+        from repro.tuning.search import autotune_paged_decode
+        b, slots, s_max, nkv, heads, d = 3, 4, 128, 2, 4, 32
+        cache = TuningCache()
+        cfg = autotune_paged_decode(b, slots, s_max, nkv, heads, d,
+                                    cache=cache, iters=1, warmup=1,
+                                    max_candidates=2)
+        assert cfg.blocks["block_kv"] % lane_granule(HW) == 0
+        assert cache.get("paged_decode", (b, slots, s_max, nkv, heads, d),
+                         "float32", "tpu_v5e") == cfg
+        set_default_cache(cache)
+        key = jax.random.PRNGKey(8)
+        q = jax.random.normal(key, (b, heads, d))
+        kp = jax.random.normal(jax.random.fold_in(key, 1),
+                               (slots, s_max, nkv, d))
+        vp = jax.random.normal(jax.random.fold_in(key, 2),
+                               (slots, s_max, nkv, d))
+        slot_idx = jnp.asarray([2, 0, 3], jnp.int32)
+        lengths = jnp.asarray([5, 64, 128], jnp.int32)
+        got = paged_decode(q, kp, vp, slot_idx, lengths, tuned=True,
+                           interpret=True)
+        want = paged_decode_ref(q, kp, vp, slot_idx, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
 
 class TestMeasuredProfile:
     def _cache(self, time_us=100.0):

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from repro.core.gemm_model import GEMM, estimate
 from repro.core.hardware import get_hardware
 from repro.tuning import TuningCache
-from repro.tuning.search import autotune_flash_attention, autotune_matmul
+from repro.tuning.search import (autotune_flash_attention,
+                                 autotune_flash_backward, autotune_matmul)
 
 MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256), (384, 256, 128)]
 FLASH_SHAPES = [(1, 256, 2, 64)]  # (batch, seq, heads, head_dim)
@@ -42,6 +43,16 @@ def run():
         blk = cfg.blocks
         rows.append((
             f"autotune_sweep/flash_b{b}_s{s}_a{a}_d{d}",
+            round(cfg.time_us, 1),
+            f"blocks={blk['block_q']}x{blk['block_kv']};"
+            f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
+            f"candidates={cfg.candidates_tried}"))
+        # the training path's other half: the fused backward grids
+        cfg = autotune_flash_backward(b, s, a, d, hw=hw, cache=cache,
+                                      iters=1, warmup=1, max_candidates=2)
+        blk = cfg.blocks
+        rows.append((
+            f"autotune_sweep/flash_bwd_b{b}_s{s}_a{a}_d{d}",
             round(cfg.time_us, 1),
             f"blocks={blk['block_q']}x{blk['block_kv']};"
             f"speedup_vs_128={cfg.speedup_vs_default:.2f};"

@@ -176,6 +176,29 @@ def perf_section(perf_rows_by_cell):
     return out
 
 
+def train_attention_section(rows):
+    """Fused-attention training sweep: step time per attn_impl on aligned vs
+    unaligned shapes (`benchmarks/train_attention_sweep.py`)."""
+    out = ["## §Training attention", "",
+           "Full `train_step` (value_and_grad + AdamW) step times across "
+           "attention impls and shape alignment.  `flash` runs the Pallas "
+           "kernel pair (forward + fused custom-VJP backward); on a CPU "
+           "container it executes in interpret mode, so compare the "
+           "misalign ratio within an impl, not absolute times across impls "
+           "(TPU hosts re-run with REPRO_KERNEL_INTERPRET=0).", ""]
+    out.append("| impl | shape | seq | head_dim | us/step | loss | "
+               "misalign ratio |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in rows:
+        ratio = r.get("misalign_ratio")
+        ratio_s = f"{ratio:.2f}x" if ratio is not None else "n/a"
+        out.append(
+            f"| {r['impl']} | {r['shape']} | {r['seq']} | {r['head_dim']} | "
+            f"{r['us_per_step']:.0f} | {r['loss']:.3f} | {ratio_s} |")
+    out.append("")
+    return out
+
+
 def serve_section(rows):
     """Serving-engine latency report: aggregate tok/s is not the whole
     story — per-request TTFT and inter-token percentiles are what a serving
@@ -215,6 +238,9 @@ def main():
     ap.add_argument("--perf", nargs="*", default=[])
     ap.add_argument("--serve", default=None,
                     help="serve_engine.jsonl from benchmarks.serve_engine")
+    ap.add_argument("--train-attn", default=None,
+                    help="train_attention.jsonl from "
+                         "benchmarks.train_attention_sweep")
     ap.add_argument("--out", default="EXPERIMENTS.md")
     args = ap.parse_args()
 
@@ -231,6 +257,8 @@ def main():
     lines += dryrun_section(dry)
     lines += roofline_section(dry)
     lines += perf_section(perf)
+    if args.train_attn:
+        lines += train_attention_section(_load(args.train_attn))
     if args.serve:
         lines += serve_section(_load(args.serve))
     with open(args.out, "w") as f:

@@ -20,6 +20,7 @@ MODULES = [
     "dimension_order",       # Fig. 14
     "autotune_sweep",        # beyond-paper: measured block-size search
     "serve_engine",          # beyond-paper: continuous batching vs static
+    "train_attention_sweep", # beyond-paper: fused-attn training step times
 ]
 
 

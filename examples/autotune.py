@@ -26,7 +26,8 @@ from repro.core.gemm_model import MeasuredProfile
 from repro.kernels.matmul.ops import matmul
 from repro.kernels.matmul.ref import matmul_ref
 from repro.tuning import TuningCache, set_default_cache
-from repro.tuning.search import autotune_flash_attention, autotune_matmul
+from repro.tuning.search import (autotune_flash_attention,
+                                 autotune_flash_backward, autotune_matmul)
 
 MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256)]
 
@@ -53,6 +54,13 @@ def main() -> None:
     print(f"  flash b1 s256 a2 d64: best blocks "
           f"({fcfg.blocks['block_q']},{fcfg.blocks['block_kv']}) "
           f"{fcfg.time_us:.0f} us, {fcfg.speedup_vs_default:.2f}x vs 128x128")
+    bcfg = autotune_flash_backward(1, 256, 2, 64, cache=cache,
+                                   iters=args.iters, warmup=1,
+                                   max_candidates=3)
+    print(f"  flash_bwd b1 s256 a2 d64: best blocks "
+          f"({bcfg.blocks['block_q']},{bcfg.blocks['block_kv']}) "
+          f"{bcfg.time_us:.0f} us, {bcfg.speedup_vs_default:.2f}x vs 128x128 "
+          f"(attn_impl=\"flash\" training picks this up via tuned=True)")
     path = cache.save(args.cache)
     print(f"  saved {len(cache)} entries -> {path}")
 

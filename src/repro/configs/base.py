@@ -38,6 +38,11 @@ class ModelConfig:
     # "naive" = paper Table II score/AOV BMM decomposition (faithful baseline)
     # "blocked" = streaming online-softmax (§VI-C3 FlashAttention; XLA twin
     #             of kernels/flash_attention, used by the §Perf hillclimb)
+    # "flash" = Pallas flash kernel with fused custom-VJP backward
+    #           (kernels/flash_attention) — the differentiable TPU training
+    #           path; consults the autotuning cache (tuned=True) and honors
+    #           $REPRO_KERNEL_INTERPRET
+    # "paged" = Pallas paged decode kernel over the serving slot pool
     attn_impl: str = "naive"
     attn_block_kv: int = 1024
     # Megatron-style sequence parallelism: residual-stream activations are

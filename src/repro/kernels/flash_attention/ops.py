@@ -4,16 +4,24 @@
 batch x heads, pads seq to the block grid, dispatches to the Pallas kernel
 (TPU) or the jnp oracle (CPU fallback / use_pallas=False).
 
+The Pallas path is *differentiable*: a jax.custom_vjp pairs the forward
+kernel (which saves per-row logsumexp residuals) with the fused Pallas
+backward in `backward.py`, so `attn_impl="flash"` trains end-to-end on the
+measured kernels.  Padded KV columns are masked inside the kernel via a real
+`kv_len` (not the causal rule), so non-causal and cross-attention shapes
+with unaligned skv are exact.
+
 With `tuned=True` the wrapper consults the autotuning cache
 (`repro.tuning.cache`) for a measured-best (block_q, block_kv) for this
-exact problem before falling back to the 128x128 default — see
-`repro.tuning.search.autotune_flash_attention`.
+exact problem — and separately for the backward blocks (op
+"flash_attention_bwd_*") — before falling back to the 128x128 defaults; see
+`repro.tuning.search.autotune_flash_attention` / `autotune_flash_backward`.
 """
 from __future__ import annotations
 
 import functools
 import os
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +29,7 @@ import jax.numpy as jnp
 from ...core.hardware import get_hardware
 from ...core.quantization import round_up
 from ...tuning.cache import lookup as _tuning_lookup
+from .backward import flash_attention_bwd_pallas
 from .kernel import flash_attention_pallas
 from .paged import paged_decode_pallas
 from .ref import attention_ref, paged_decode_ref
@@ -36,55 +45,128 @@ def _unfold(x, b, h):
     return x.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 
+class _FlashConfig(NamedTuple):
+    """Static kernel config threaded through the custom_vjp (hashable)."""
+    causal: bool
+    block_q: int
+    block_kv: int
+    bwd_block_q: int
+    bwd_block_kv: int
+    interpret: bool
+
+
+def _pad_seq(x, target: int):
+    s = x.shape[1]
+    return x if s == target else jnp.pad(x, ((0, 0), (0, target - s), (0, 0)))
+
+
+def _flash_fwd(cfg: _FlashConfig, q, k, v, need_residuals: bool):
+    """Pad folded (bh, s, d) tensors to the block grid and run the forward
+    kernel.  Returns (out, lse) sliced back to the real sq; lse is None on
+    the residual-free path (inference forwards skip the logsumexp work —
+    pallas_call is opaque to XLA, so DCE could never drop it)."""
+    sq, skv = q.shape[1], k.shape[1]
+    qf = _pad_seq(q, round_up(sq, cfg.block_q))
+    kf = _pad_seq(k, round_up(skv, cfg.block_kv))
+    vf = _pad_seq(v, round_up(skv, cfg.block_kv))
+    res = flash_attention_pallas(
+        qf, kf, vf, causal=cfg.causal, block_q=cfg.block_q,
+        block_kv=cfg.block_kv, kv_len=skv, return_residuals=need_residuals,
+        interpret=cfg.interpret)
+    if need_residuals:
+        out, lse = res
+        return out[:, :sq], lse[:, :sq]
+    return res[:, :sq], None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_core(cfg: _FlashConfig, q, k, v):
+    return _flash_fwd(cfg, q, k, v, need_residuals=False)[0]
+
+
+def _flash_core_fwd(cfg: _FlashConfig, q, k, v):
+    out, lse = _flash_fwd(cfg, q, k, v, need_residuals=True)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(cfg: _FlashConfig, residuals, g):
+    q, k, v, out, lse = residuals
+    sq, skv = q.shape[1], k.shape[1]
+    bq, bkv = cfg.bwd_block_q, cfg.bwd_block_kv
+    sq_p, skv_p = round_up(sq, bq), round_up(skv, bkv)
+    # padded query rows carry do = 0 (and lse = 0, kept finite by the
+    # forward's masked-row guard), so they contribute exactly zero gradient
+    dq, dk_h, dv_h = flash_attention_bwd_pallas(
+        _pad_seq(q, sq_p), _pad_seq(k, skv_p), _pad_seq(v, skv_p),
+        _pad_seq(out, sq_p), _pad_seq(lse[..., None], sq_p)[..., 0],
+        _pad_seq(g, sq_p), causal=cfg.causal, block_q=bq, block_kv=bkv,
+        kv_len=skv, interpret=cfg.interpret)
+    bh = q.shape[0]
+    bkv_h = k.shape[0]
+    grp = bh // bkv_h
+    # dk/dv come back at query-head resolution: reduce each GQA head group
+    dk = dk_h[:, :skv].reshape(bkv_h, grp, skv, -1).sum(1)
+    dv = dv_h[:, :skv].reshape(bkv_h, grp, skv, -1).sum(1)
+    return (dq[:, :sq].astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "bwd_block_q", "bwd_block_kv",
                                              "interpret", "use_pallas"))
 def _flash_jit(q, k, v, *, causal: bool, block_q: int, block_kv: int,
-               interpret: bool, use_pallas: bool):
+               bwd_block_q: int, bwd_block_kv: int, interpret: bool,
+               use_pallas: bool):
     b, sq, a, d = q.shape
     qf, kf, vf = _fold(q), _fold(k), _fold(v)
     if not use_pallas:
         return _unfold(attention_ref(qf, kf, vf, causal=causal), b, a)
-    skv = k.shape[1]
-    sq_p = round_up(sq, block_q)
-    skv_p = round_up(skv, block_kv)
-    if sq_p != sq:
-        qf = jnp.pad(qf, ((0, 0), (0, sq_p - sq), (0, 0)))
-    if skv_p != skv:
-        # padded kv positions are masked out by the causal rule for decode-
-        # free use; for non-causal we mask via a -inf score on padded keys,
-        # implemented by zero-padding k and relying on softmax renorm error
-        # being sliced away only when causal guards it — so require causal
-        # or exact skv here.
-        assert causal, "non-causal flash requires skv % block_kv == 0"
-        kf = jnp.pad(kf, ((0, 0), (0, skv_p - skv), (0, 0)))
-        vf = jnp.pad(vf, ((0, 0), (0, skv_p - skv), (0, 0)))
-    out = flash_attention_pallas(qf, kf, vf, causal=causal, block_q=block_q,
-                                 block_kv=block_kv, interpret=interpret)
-    return _unfold(out[:, :sq], b, a)
+    cfg = _FlashConfig(causal=causal, block_q=block_q, block_kv=block_kv,
+                       bwd_block_q=bwd_block_q, bwd_block_kv=bwd_block_kv,
+                       interpret=interpret)
+    return _unfold(_flash_core(cfg, qf, kf, vf), b, a)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
-                    block_kv: int = 128, interpret: bool = True,
+                    block_kv: int = 128, bwd_block_q: int = 128,
+                    bwd_block_kv: int = 128, interpret: bool = True,
                     use_pallas: bool = True, tuned: bool = False,
                     hw_name: Optional[str] = None):
     """q: (b, sq, a, d); k, v: (b, skv, kv_heads, d).  Returns (b, sq, a, d).
 
-    tuned=True overrides (block_q, block_kv) with the autotuning cache's
-    measured-best config for this problem when one exists (cache misses keep
-    the defaults).  The lookup runs at trace time, outside the jit.
+    Differentiable: the Pallas path carries a custom VJP onto the fused
+    backward kernels (backward.py), so this op can sit inside value_and_grad
+    / train_step.  (bwd_block_q, bwd_block_kv) block the backward grids
+    independently of the forward.
+
+    tuned=True overrides the forward (block_q, block_kv) — and the backward
+    blocks, from the separate "flash_attention_bwd_*" entries — with the
+    autotuning cache's measured-best config for this problem when one exists
+    (cache misses keep the defaults).  Lookups run at trace time, outside
+    the jit.
     """
     if tuned and use_pallas:
         b, sq, a, d = q.shape
         skv = k.shape[1]
+        dtype = jnp.dtype(q.dtype).name
+        hw = hw_name or get_hardware().name
         op = ("flash_attention_causal" if causal else "flash_attention_full")
-        cfg = _tuning_lookup(op, (b, sq, skv, a, d),
-                             jnp.dtype(q.dtype).name,
-                             hw_name or get_hardware().name)
+        cfg = _tuning_lookup(op, (b, sq, skv, a, d), dtype, hw)
         if cfg is not None:
             block_q = cfg.blocks["block_q"]
             block_kv = cfg.blocks["block_kv"]
+        op_bwd = ("flash_attention_bwd_causal" if causal
+                  else "flash_attention_bwd_full")
+        cfg_bwd = _tuning_lookup(op_bwd, (b, sq, skv, a, d), dtype, hw)
+        if cfg_bwd is not None:
+            bwd_block_q = cfg_bwd.blocks["block_q"]
+            bwd_block_kv = cfg_bwd.blocks["block_kv"]
     return _flash_jit(q, k, v, causal=causal, block_q=block_q,
-                      block_kv=block_kv, interpret=interpret,
+                      block_kv=block_kv, bwd_block_q=bwd_block_q,
+                      bwd_block_kv=bwd_block_kv, interpret=interpret,
                       use_pallas=use_pallas)
 
 

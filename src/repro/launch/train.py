@@ -58,7 +58,8 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adamw8bit"])
     ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
-    ap.add_argument("--attn-impl", default=None, choices=[None, "naive", "blocked"])
+    ap.add_argument("--attn-impl", default=None,
+                    choices=[None, "naive", "blocked", "flash"])
     ap.add_argument("--microbatch", type=int, default=0, help="per-device rows; 0=no accumulation")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")

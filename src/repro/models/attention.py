@@ -141,6 +141,15 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
                            jnp.arange(b, dtype=jnp.int32), lengths,
                            tuned=True,
                            interpret=default_interpret())[:, None]
+    elif cfg.attn_impl == "flash" and not is_decode and cache is None:
+        # Pallas flash kernel with its custom-VJP fused backward: the
+        # training/prefill fast path.  Cache-backed prefill (dynamic kv_len)
+        # and decode stay on the jnp paths below; MLA never routes here.
+        from ..kernels.flash_attention.ops import (default_interpret,
+                                                   flash_attention)
+        out = flash_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                              causal=causal and kv_input is None,
+                              tuned=True, interpret=default_interpret())
     elif cfg.attn_impl == "blocked" and not is_decode:
         from .blocked_attention import blocked_sdpa
         out = blocked_sdpa(q, k.astype(q.dtype), v.astype(q.dtype),

@@ -88,6 +88,37 @@ def flash_vmem_bytes(block_q: int, block_kv: int, head_dim: int,
     return q_blk + DOUBLE_BUFFER * kv_blk + scratch + scores + out
 
 
+def flash_bwd_vmem_bytes(block_q: int, block_kv: int, head_dim: int,
+                         dtype_bytes: int = 2) -> int:
+    """VMEM working set of the flash backward kernels (the dkv grid is the
+    larger of the two): streamed q/do blocks + lse/di rows, resident k/v
+    blocks, the f32 score and ds tiles, two f32 (block_kv, d) accumulators,
+    and the dk/dv output blocks."""
+    q_stream = DOUBLE_BUFFER * (2 * block_q * head_dim * dtype_bytes
+                                + 2 * block_q * 4)
+    kv_blk = 2 * block_kv * head_dim * dtype_bytes
+    tiles = 2 * block_q * block_kv * 4
+    acc = 2 * block_kv * head_dim * 4
+    out = 2 * block_kv * head_dim * dtype_bytes
+    return q_stream + kv_blk + tiles + acc + out
+
+
+def flash_backward_candidates(seq_q: int, seq_kv: int, head_dim: int,
+                              hw: Hardware | None = None,
+                              dtype_bytes: int = 2,
+                              max_candidates: int | None = None
+                              ) -> List[Tuple[int, int]]:
+    """All (block_q, block_kv) worth timing for the flash *backward* grids.
+
+    Same tile-alignment lattice as `flash_candidates`, but under the
+    backward VMEM model: the dkv kernel keeps two extra f32 accumulators and
+    the ds tile resident, so the feasible region is strictly smaller than
+    the forward's.  The 128x128 default is always included.
+    """
+    return _flash_lattice(seq_q, seq_kv, head_dim, flash_bwd_vmem_bytes,
+                          hw, dtype_bytes, max_candidates)
+
+
 def matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
                       dtype_bytes: int = 2,
                       max_candidates: int | None = None
@@ -155,16 +186,13 @@ def paged_decode_candidates(s_max: int, head_dim: int, group: int = 1,
     return cands
 
 
-def flash_candidates(seq_q: int, seq_kv: int, head_dim: int,
-                     hw: Hardware | None = None, dtype_bytes: int = 2,
-                     max_candidates: int | None = None
-                     ) -> List[Tuple[int, int]]:
-    """All (block_q, block_kv) worth timing for a flash-attention problem.
-
-    block_q is sublane-aligned, block_kv lane-aligned (the (block_q,
-    block_kv) score tile feeds the MXU), and the streaming working set must
-    fit VMEM.  The 128x128 default is always included.
-    """
+def _flash_lattice(seq_q: int, seq_kv: int, head_dim: int, vmem_bytes,
+                   hw: Hardware | None, dtype_bytes: int,
+                   max_candidates: int | None) -> List[Tuple[int, int]]:
+    """Shared (block_q, block_kv) lattice for the flash forward/backward
+    sweeps: block_q sublane-aligned, block_kv lane-aligned (the score tile
+    feeds the MXU), feasibility decided by the given VMEM model.  The
+    128x128 default is always included when it fits."""
     hw = hw or get_hardware()
     sub = sublane_granule(hw, dtype_bytes)
     lane = lane_granule(hw)
@@ -175,11 +203,11 @@ def flash_candidates(seq_q: int, seq_kv: int, head_dim: int,
         (bq, bkv)
         for bq in q_steps
         for bkv in kv_steps
-        if flash_vmem_bytes(bq, bkv, head_dim, dtype_bytes) <= hw.sram_bytes
+        if vmem_bytes(bq, bkv, head_dim, dtype_bytes) <= hw.sram_bytes
     ]
     cands.sort(key=lambda c: -(c[0] * c[1]))
     default = (128, 128)
-    if default not in cands and flash_vmem_bytes(*default, head_dim, dtype_bytes) <= hw.sram_bytes:
+    if default not in cands and vmem_bytes(*default, head_dim, dtype_bytes) <= hw.sram_bytes:
         cands.append(default)
     if max_candidates is not None and len(cands) > max_candidates:
         keep = cands[:max_candidates]
@@ -187,3 +215,17 @@ def flash_candidates(seq_q: int, seq_kv: int, head_dim: int,
             keep[-1] = default
         cands = keep
     return cands
+
+
+def flash_candidates(seq_q: int, seq_kv: int, head_dim: int,
+                     hw: Hardware | None = None, dtype_bytes: int = 2,
+                     max_candidates: int | None = None
+                     ) -> List[Tuple[int, int]]:
+    """All (block_q, block_kv) worth timing for a flash-attention problem.
+
+    block_q is sublane-aligned, block_kv lane-aligned (the (block_q,
+    block_kv) score tile feeds the MXU), and the streaming working set must
+    fit VMEM.  The 128x128 default is always included.
+    """
+    return _flash_lattice(seq_q, seq_kv, head_dim, flash_vmem_bytes,
+                          hw, dtype_bytes, max_candidates)

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 
 from ..core.hardware import Hardware, get_hardware
 from .cache import TunedConfig, TuningCache, get_default_cache
-from .candidates import (flash_candidates, matmul_candidates,
-                         paged_decode_candidates)
+from .candidates import (flash_backward_candidates, flash_candidates,
+                         matmul_candidates, paged_decode_candidates)
 from .measure import wall_us
 
 DEFAULT_MATMUL_BLOCKS = (128, 128, 128)
@@ -40,6 +40,11 @@ class Trial:
 
 def flash_op_name(causal: bool) -> str:
     return "flash_attention_causal" if causal else "flash_attention_full"
+
+
+def flash_bwd_op_name(causal: bool) -> str:
+    return ("flash_attention_bwd_causal" if causal
+            else "flash_attention_bwd_full")
 
 
 def _dtype_name(dtype) -> str:
@@ -185,6 +190,68 @@ def autotune_flash_attention(batch: int, seq: int, heads: int, head_dim: int,
     best = min(trials, key=lambda t: t.time_us)
     cfg = TunedConfig(
         op=flash_op_name(causal),
+        shape=(batch, seq, seq_kv, heads, head_dim),
+        dtype=_dtype_name(dtype), hw_name=hw.name,
+        blocks={"block_q": best.blocks[0], "block_kv": best.blocks[1]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials))
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_flash_backward(batch: int, seq: int, heads: int, head_dim: int,
+                            *, seq_kv: Optional[int] = None,
+                            causal: bool = True, dtype=jnp.float32,
+                            hw: Optional[Hardware] = None,
+                            cache: Optional[TuningCache] = None,
+                            interpret: bool = True, iters: int = 3,
+                            warmup: int = 1,
+                            max_candidates: Optional[int] = None,
+                            verbose: bool = False) -> TunedConfig:
+    """Sweep (block_q, block_kv) for the flash-attention *backward* grids of
+    a (batch, seq, heads, head_dim) problem; persist and return the measured
+    winner under op "flash_attention_bwd_causal" / "..._full".
+
+    Each trial times jax.grad through `flash_attention` with the forward
+    pinned to its 128 defaults and only the backward blocks varying, so the
+    ranking isolates the dq/dkv grids (the forward cost is a constant
+    offset).  `flash_attention(tuned=True)` then picks the entry up
+    alongside the forward one — forward and backward tile geometries tune
+    independently, as on real hardware.
+    """
+    from ..kernels.flash_attention.ops import flash_attention
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    seq_kv = seq_kv or seq
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    cands = flash_backward_candidates(seq, seq_kv, head_dim, hw, dtype_bytes,
+                                      max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (batch, seq, heads, head_dim)).astype(dtype)
+    kv_shape = (batch, seq_kv, heads, head_dim)
+    k = jax.random.normal(jax.random.fold_in(key, 1), kv_shape).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), kv_shape).astype(dtype)
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bq, bkv in cands:
+        def vjp(q, k, v, bq=bq, bkv=bkv):
+            return jax.grad(
+                lambda q, k, v: flash_attention(
+                    q, k, v, causal=causal, bwd_block_q=bq, bwd_block_kv=bkv,
+                    interpret=interpret).sum().astype(jnp.float32),
+                argnums=(0, 1, 2))(q, k, v)
+        t = wall_us(vjp, q, k, v, iters=iters, warmup=warmup, jit=True)
+        trials.append(Trial((bq, bkv), t))
+        if (bq, bkv) == DEFAULT_FLASH_BLOCKS:
+            baseline_us = t
+        if verbose:
+            print(f"  flash_bwd b{batch} s{seq} a{heads} d{head_dim} "
+                  f"blocks=({bq},{bkv}): {t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op=flash_bwd_op_name(causal),
         shape=(batch, seq, seq_kv, heads, head_dim),
         dtype=_dtype_name(dtype), hw_name=hw.name,
         blocks={"block_q": best.blocks[0], "block_kv": best.blocks[1]},

@@ -54,8 +54,8 @@ class TestFlashAttentionKernel:
     ])
     @pytest.mark.parametrize("causal", [True, False])
     def test_flash_sweep(self, b, s, a, kv, d, causal):
-        if not causal and s % 128:
-            pytest.skip("non-causal requires block-divisible skv")
+        # non-causal unaligned shapes exercise the kernel's kv_len column
+        # masking (padded keys no longer hide behind the causal rule)
         q = jax.random.normal(KEY, (b, s, a, d), jnp.float32) * 0.5
         k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, d)) * 0.5
         v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, d)) * 0.5

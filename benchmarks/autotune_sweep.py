@@ -16,10 +16,13 @@ from repro.core.gemm_model import GEMM, estimate
 from repro.core.hardware import get_hardware
 from repro.tuning import TuningCache
 from repro.tuning.search import (autotune_flash_attention,
-                                 autotune_flash_backward, autotune_matmul)
+                                 autotune_flash_backward, autotune_fused_mlp,
+                                 autotune_matmul)
 
 MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256), (384, 256, 128)]
 FLASH_SHAPES = [(1, 256, 2, 64)]  # (batch, seq, heads, head_dim)
+# (m, h, f) fused SwiGLU hidden shapes: aligned f and the 8h/3 heuristic f
+FUSED_MLP_SHAPES = [(256, 256, 768), (256, 256, 683)]
 
 
 def run():
@@ -55,6 +58,15 @@ def run():
             f"autotune_sweep/flash_bwd_b{b}_s{s}_a{a}_d{d}",
             round(cfg.time_us, 1),
             f"blocks={blk['block_q']}x{blk['block_kv']};"
+            f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
+            f"candidates={cfg.candidates_tried}"))
+    for m, h, f in FUSED_MLP_SHAPES:
+        cfg = autotune_fused_mlp(m, h, f, hw=hw, cache=cache, iters=2,
+                                 warmup=1, max_candidates=4)
+        blk = cfg.blocks
+        rows.append((
+            f"autotune_sweep/fused_mlp_{m}x{h}x{f}", round(cfg.time_us, 1),
+            f"blocks={blk['block_m']}x{blk['block_f']}x{blk['block_k']};"
             f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
             f"candidates={cfg.candidates_tried}"))
     return rows

@@ -199,6 +199,33 @@ def train_attention_section(rows):
     return out
 
 
+def mlp_fusion_section(rows):
+    """Fused vs unfused MLP report: forward/grad times per impl on aligned
+    vs 8h/3-misaligned d_ff (`benchmarks/mlp_fusion_sweep.py`)."""
+    out = ["## §MLP fusion", "",
+           "SwiGLU hidden (gate/up GEMM pair + silu*mul) per execution "
+           "strategy of the linear-execution layer (`repro.models.linear`): "
+           "`jnp` = XLA, `unfused` = two Pallas matmuls, `fused` = the "
+           "single fused kernel (`kernels/fused_mlp`).  `grad` rows "
+           "differentiate through each path (the fused one via its "
+           "recompute-based custom-VJP backward).  CPU container: Pallas "
+           "rows run in interpret mode — compare the misalign ratio within "
+           "an impl and fused-vs-unfused at equal shape, not absolute "
+           "times (TPU hosts re-run with REPRO_KERNEL_INTERPRET=0).", ""]
+    out.append("| impl | d_ff | util | fwd us | grad us | fwd vs unfused | "
+               "misalign ratio |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in rows:
+        ratio = r.get("misalign_ratio")
+        ratio_s = f"{ratio:.2f}x" if ratio is not None else "n/a"
+        out.append(
+            f"| {r['impl']} | {r['d_ff']} | {r['mxu_utilization']:.3f} | "
+            f"{r['fwd_us']:.0f} | {r['grad_us']:.0f} | "
+            f"{r['fwd_vs_unfused']:.2f}x | {ratio_s} |")
+    out.append("")
+    return out
+
+
 def serve_section(rows):
     """Serving-engine latency report: aggregate tok/s is not the whole
     story — per-request TTFT and inter-token percentiles are what a serving
@@ -241,6 +268,8 @@ def main():
     ap.add_argument("--train-attn", default=None,
                     help="train_attention.jsonl from "
                          "benchmarks.train_attention_sweep")
+    ap.add_argument("--mlp-fusion", default=None,
+                    help="mlp_fusion.jsonl from benchmarks.mlp_fusion_sweep")
     ap.add_argument("--out", default="EXPERIMENTS.md")
     args = ap.parse_args()
 
@@ -259,6 +288,8 @@ def main():
     lines += perf_section(perf)
     if args.train_attn:
         lines += train_attention_section(_load(args.train_attn))
+    if args.mlp_fusion:
+        lines += mlp_fusion_section(_load(args.mlp_fusion))
     if args.serve:
         lines += serve_section(_load(args.serve))
     with open(args.out, "w") as f:

@@ -21,6 +21,7 @@ MODULES = [
     "autotune_sweep",        # beyond-paper: measured block-size search
     "serve_engine",          # beyond-paper: continuous batching vs static
     "train_attention_sweep", # beyond-paper: fused-attn training step times
+    "mlp_fusion_sweep",      # beyond-paper: fused vs unfused MLP, d_ff alignment
 ]
 
 

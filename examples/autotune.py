@@ -27,9 +27,13 @@ from repro.kernels.matmul.ops import matmul
 from repro.kernels.matmul.ref import matmul_ref
 from repro.tuning import TuningCache, set_default_cache
 from repro.tuning.search import (autotune_flash_attention,
-                                 autotune_flash_backward, autotune_matmul)
+                                 autotune_flash_backward, autotune_fused_mlp,
+                                 autotune_matmul)
 
 MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256)]
+# (m, h, f) for the fused SwiGLU hidden: f = 683 is the 8h/3 heuristic for
+# h = 256 — the §VII-B misaligned shape the fused kernel pays padding on
+FUSED_MLP_SHAPE = (256, 256, 683)
 
 
 def main() -> None:
@@ -61,6 +65,14 @@ def main() -> None:
           f"({bcfg.blocks['block_q']},{bcfg.blocks['block_kv']}) "
           f"{bcfg.time_us:.0f} us, {bcfg.speedup_vs_default:.2f}x vs 128x128 "
           f"(attn_impl=\"flash\" training picks this up via tuned=True)")
+    m, h, f = FUSED_MLP_SHAPE
+    mcfg = autotune_fused_mlp(m, h, f, cache=cache, iters=args.iters,
+                              warmup=1, max_candidates=4)
+    b = mcfg.blocks
+    print(f"  fused_mlp m{m} h{h} f{f} (8h/3-misaligned): best blocks "
+          f"({b['block_m']},{b['block_f']},{b['block_k']}) "
+          f"{mcfg.time_us:.0f} us, {mcfg.speedup_vs_default:.2f}x vs 128^3 "
+          f"(linear_impl=\"fused\" MLPs pick this up via tuned=True)")
     path = cache.save(args.cache)
     print(f"  saved {len(cache)} entries -> {path}")
 

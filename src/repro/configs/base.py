@@ -45,6 +45,14 @@ class ModelConfig:
     # "paged" = Pallas paged decode kernel over the serving slot pool
     attn_impl: str = "naive"
     attn_block_kv: int = 1024
+    # linear-execution dispatch for every dense projection GEMM (qkv/output,
+    # MLP, lm_head, MoE experts) — all routed through repro.models.linear:
+    # "jnp"    = XLA x @ w (CPU/dry-run default)
+    # "pallas" = tile-aligned Pallas matmul kernel at its 128^3 defaults
+    # "tuned"  = Pallas + per-(m, k, n, dtype, hw) autotuning-cache blocks
+    # "fused"  = tuned dispatch + the fused SwiGLU/MLP Pallas kernel for the
+    #            MLP gate/up pair (kernels/fused_mlp; the §VII-B hot path)
+    linear_impl: str = "jnp"
     # Megatron-style sequence parallelism: residual-stream activations are
     # sequence-sharded on the model axis between TP blocks (norms/adds run
     # 1/t-sharded; XLA converts the TP all-reduce into all-gather +

@@ -1,0 +1,8 @@
+"""Fused SwiGLU/MLP Pallas kernel: gate+up GEMM pair + elementwise combine
+in one tiled pass, with a recompute-based custom-VJP backward (kernel.py /
+backward.py / ops.py — same layout as kernels/flash_attention)."""
+from .ops import fused_mlp_hidden, fused_mlp_op_name
+from .ref import ACTS, MLP_TYPES, fused_mlp_hidden_ref, is_gated
+
+__all__ = ["fused_mlp_hidden", "fused_mlp_op_name", "fused_mlp_hidden_ref",
+           "ACTS", "MLP_TYPES", "is_gated"]

@@ -1,0 +1,171 @@
+"""Pallas backward kernels for the fused MLP hidden op: dx and (dwg, dwu).
+
+Two kernels, mirroring the flash-attention dq/dkv split (backward.py there)
+so neither needs atomics on a sequential TPU grid:
+
+  dx — grid (m_blocks, f_blocks), f innermost; a VMEM f32 accumulator
+       carries dx for one m block across the f steps.
+  dw — grid (f_blocks, m_blocks), m innermost; VMEM f32 accumulators carry
+       (dwg, dwu) for one f block across the m steps.
+
+Both *recompute* the gate/up pre-activations from (x, w) instead of storing
+them — the same residual-free strategy as the flash backward (which
+recomputes p from the saved logsumexp): the forward saves nothing but its
+inputs, so activation memory for the MLP pair stays O(m*h + m*f_out), not
+O(2*m*f).  The elementwise derivatives come from `ref.ACTS`.
+
+The contraction (h) dimension rides un-blocked inside each kernel step, like
+head_dim in the flash kernels: pre-activation recomputation needs full-k
+GEMMs, so blocking h would force a second accumulation loop for no VMEM win
+at model widths (block_m x h f32 is ~2 MB at h=4096).
+
+Math, for hidden = act(x@wg) * (x@wu) (gated; plain drops the gate factor):
+
+    g = x@wg, u = x@wu
+    dg = dh * u * act'(g);  du = dh * act(g)
+    dx = dg @ wg^T + du @ wu^T;  dwg = x^T @ dg;  dwu = x^T @ du
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ACTS, is_gated
+
+
+def _tiles(x_ref, wu_ref, dh_ref, wg_ref, mlp_type: str):
+    """Recompute the (dg, du) cotangent tiles for one (block_m, block_f)
+    cell.  Returns (dg, du) with dg None on the un-gated path."""
+    act, dact = ACTS[mlp_type]
+    x = x_ref[...]
+    wu = wu_ref[...]
+    dh = dh_ref[...].astype(jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    if wg_ref is None:
+        return None, dh * dact(u)
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    return dh * u * dact(g), dh * act(g)
+
+
+def _dx_kernel(x_ref, *refs, f_steps: int, mlp_type: str):
+    if is_gated(mlp_type):
+        wg_ref, wu_ref, dh_ref, dx_ref, acc_ref = refs
+    else:
+        (wu_ref, dh_ref, dx_ref, acc_ref), wg_ref = refs, None
+    fi = pl.program_id(1)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dg, du = _tiles(x_ref, wu_ref, dh_ref, wg_ref, mlp_type)
+    # d(pre) @ w^T contributions, contracted over the f block
+    acc_ref[...] += jax.lax.dot_general(
+        du, wu_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if dg is not None:
+        acc_ref[...] += jax.lax.dot_general(
+            dg, wg_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(fi == f_steps - 1)
+    def _done():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def _dw_kernel(x_ref, *refs, m_steps: int, mlp_type: str):
+    if is_gated(mlp_type):
+        wg_ref, wu_ref, dh_ref, dwg_ref, dwu_ref, dwg_acc, dwu_acc = refs
+    else:
+        (wu_ref, dh_ref, dwu_ref, dwu_acc), wg_ref = refs, None
+        dwg_ref = dwg_acc = None
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        dwu_acc[...] = jnp.zeros_like(dwu_acc)
+        if dwg_acc is not None:
+            dwg_acc[...] = jnp.zeros_like(dwg_acc)
+
+    dg, du = _tiles(x_ref, wu_ref, dh_ref, wg_ref, mlp_type)
+    # x^T @ d(pre) contributions, contracted over the m block
+    x = x_ref[...]
+    dwu_acc[...] += jax.lax.dot_general(
+        x, du, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    if dg is not None:
+        dwg_acc[...] += jax.lax.dot_general(
+            x, dg, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(mi == m_steps - 1)
+    def _done():
+        dwu_ref[...] = dwu_acc[...].astype(dwu_ref.dtype)
+        if dwg_ref is not None:
+            dwg_ref[...] = dwg_acc[...].astype(dwg_ref.dtype)
+
+
+def fused_mlp_bwd_pallas(x, w_gate, w_up, dh, *, mlp_type: str = "swiglu",
+                         block_m: int = 128, block_f: int = 128,
+                         interpret: bool = False):
+    """Fused backward for `fused_mlp_pallas`.
+
+    x: (m, h); w_gate (gated only), w_up: (h, f); dh: (m, f) cotangent.
+    Requires m % block_m == 0 and f % block_f == 0 (ops.py pads; padded dh
+    rows/columns are zero, so their dg/du tiles contribute exactly zero).
+
+    Returns (dx, dwg, dwu) with dwg None on the un-gated path.
+    """
+    m, h = x.shape
+    _, f = w_up.shape
+    assert m % block_m == 0 and f % block_f == 0
+    gated = is_gated(mlp_type)
+    m_steps, f_steps = m // block_m, f // block_f
+
+    from jax.experimental.pallas import tpu as pltpu
+    xspec = pl.BlockSpec((block_m, h), lambda i, j: (i, 0))
+    wspec = pl.BlockSpec((h, block_f), lambda i, j: (0, j))
+    dhspec = pl.BlockSpec((block_m, block_f), lambda i, j: (i, j))
+    ins = [x, w_gate, w_up, dh] if gated else [x, w_up, dh]
+    in_specs = ([xspec, wspec, wspec, dhspec] if gated
+                else [xspec, wspec, dhspec])
+    dx = pl.pallas_call(
+        functools.partial(_dx_kernel, f_steps=f_steps, mlp_type=mlp_type),
+        grid=(m_steps, f_steps),
+        in_specs=in_specs,
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct((m, h), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, h), jnp.float32)],
+        interpret=interpret,
+    )(*ins)
+
+    # dw grid transposes the block walk: f outer, m inner
+    xspec_t = pl.BlockSpec((block_m, h), lambda j, i: (i, 0))
+    wspec_t = pl.BlockSpec((h, block_f), lambda j, i: (0, j))
+    dhspec_t = pl.BlockSpec((block_m, block_f), lambda j, i: (i, j))
+    in_specs_t = ([xspec_t, wspec_t, wspec_t, dhspec_t] if gated
+                  else [xspec_t, wspec_t, dhspec_t])
+    dw_shape = jax.ShapeDtypeStruct((h, f), w_up.dtype)
+    dw_acc = pltpu.VMEM((h, block_f), jnp.float32)
+    if gated:
+        dwg, dwu = pl.pallas_call(
+            functools.partial(_dw_kernel, m_steps=m_steps, mlp_type=mlp_type),
+            grid=(f_steps, m_steps),
+            in_specs=in_specs_t,
+            out_specs=[wspec_t, wspec_t],
+            out_shape=[dw_shape, dw_shape],
+            scratch_shapes=[dw_acc, dw_acc],
+            interpret=interpret,
+        )(*ins)
+        return dx, dwg, dwu
+    dwu = pl.pallas_call(
+        functools.partial(_dw_kernel, m_steps=m_steps, mlp_type=mlp_type),
+        grid=(f_steps, m_steps),
+        in_specs=in_specs_t,
+        out_specs=wspec_t,
+        out_shape=dw_shape,
+        scratch_shapes=[dw_acc],
+        interpret=interpret,
+    )(*ins)
+    return dx, None, dwu

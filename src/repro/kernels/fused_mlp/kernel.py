@@ -1,0 +1,107 @@
+"""Fused SwiGLU/MLP forward Pallas kernel — the paper's dominant GEMM pair
+(§VII-B) executed as one tiled pass.
+
+Grid (m_blocks, f_blocks, k_steps), k innermost, mirroring kernels/matmul:
+each (i, j) output tile streams the shared x block once per k step while TWO
+f32 VMEM accumulators carry the gate and up partial sums (TPU grids execute
+sequentially per core, so scratch persists across the k steps of a tile).
+At the last k step the elementwise epilogue — silu(gate) * up for swiglu,
+act(up) for the 2-matrix variants — runs on the f32 accumulators and a
+single (block_m, block_f) hidden tile is written.
+
+Compared with two matmul_pallas calls + an XLA elementwise op, the fusion
+(a) reads each x block once instead of twice and (b) never materializes the
+(m, f) gate/up activations in HBM — exactly the activation-traffic saving
+the roofline model attributes to the MLP hot path.
+
+Block shapes are co-design knobs on the same (sublane, lane) lattice as the
+matmul kernel; `tuning.candidates.fused_mlp_candidates` enumerates the
+feasible set under the two-accumulator VMEM model and
+`tuning.search.autotune_fused_mlp` persists measured winners.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ACTS, is_gated
+
+
+def _gated_kernel(x_ref, wg_ref, wu_ref, o_ref, acc_g, acc_u, *,
+                  k_steps: int, mlp_type: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[...]
+    acc_g[...] += jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    acc_u[...] += jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        act, _ = ACTS[mlp_type]
+        o_ref[...] = (act(acc_g[...]) * acc_u[...]).astype(o_ref.dtype)
+
+
+def _plain_kernel(x_ref, wu_ref, o_ref, acc_u, *, k_steps: int, mlp_type: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    acc_u[...] += jnp.dot(x_ref[...], wu_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        act, _ = ACTS[mlp_type]
+        o_ref[...] = act(acc_u[...]).astype(o_ref.dtype)
+
+
+def fused_mlp_pallas(x: jax.Array, w_gate, w_up: jax.Array, *,
+                     mlp_type: str = "swiglu", block_m: int = 128,
+                     block_f: int = 128, block_k: int = 128,
+                     out_dtype=None, interpret: bool = False) -> jax.Array:
+    """Hidden = act-combine of the gate/up GEMMs.  x: (m, h); w_*: (h, f).
+
+    Requires block-divisible shapes (ops.fused_mlp_hidden pads misaligned
+    problems and slices the result — the tile-quantization cost the paper's
+    utilization term prices stays explicit)."""
+    m, h = x.shape
+    h2, f = w_up.shape
+    assert h == h2, (x.shape, w_up.shape)
+    assert m % block_m == 0 and f % block_f == 0 and h % block_k == 0, (
+        "fused_mlp_pallas requires padded shapes; use ops.fused_mlp_hidden")
+    gated = is_gated(mlp_type)
+    if gated:
+        assert w_gate is not None and w_gate.shape == w_up.shape
+    out_dtype = out_dtype or x.dtype
+    k_steps = h // block_k
+    grid = (m // block_m, f // block_f, k_steps)
+    xspec = pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk))
+    wspec = pl.BlockSpec((block_k, block_f), lambda i, j, kk: (kk, j))
+    ospec = pl.BlockSpec((block_m, block_f), lambda i, j, kk: (i, j))
+    from jax.experimental.pallas import tpu as pltpu
+    acc = pltpu.VMEM((block_m, block_f), jnp.float32)
+    if gated:
+        return pl.pallas_call(
+            functools.partial(_gated_kernel, k_steps=k_steps, mlp_type=mlp_type),
+            grid=grid,
+            in_specs=[xspec, wspec, wspec],
+            out_specs=ospec,
+            out_shape=jax.ShapeDtypeStruct((m, f), out_dtype),
+            scratch_shapes=[acc, acc],
+            interpret=interpret,
+        )(x, w_gate, w_up)
+    return pl.pallas_call(
+        functools.partial(_plain_kernel, k_steps=k_steps, mlp_type=mlp_type),
+        grid=grid,
+        in_specs=[xspec, wspec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((m, f), out_dtype),
+        scratch_shapes=[acc],
+        interpret=interpret,
+    )(x, w_up)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the fused MLP hidden computation, plus the
+activation/derivative pairs shared between the forward kernel and the
+recompute-based backward kernels.
+
+The fused op is the *hidden half* of an MLP block:
+
+    swiglu:       h = silu(x @ w_gate) * (x @ w_up)     (gated, 2 GEMMs)
+    gelu / relu2: h = act(x @ w_up)                     (plain, 1 GEMM)
+
+Fusing the gate/up GEMM pair with the elementwise silu*mul is the standard
+full-stack move for the dominant transformer kernel (Kim et al., Full Stack
+Optimization of Transformer Inference): the (m, f) gate and up activations
+never round-trip through HBM — one hidden tensor is written instead of
+three.  The down projection stays a plain GEMM (models.linear dispatches it).
+
+Derivatives are written out explicitly (rather than jax.grad'd) because the
+backward kernels recompute the pre-activations inside Pallas and need the
+elementwise derivative as a plain function of the recomputed tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MLP_TYPES = ("swiglu", "gelu", "relu2")
+
+
+def is_gated(mlp_type: str) -> bool:
+    return mlp_type == "swiglu"
+
+
+def _silu(z):
+    return z * jax.nn.sigmoid(z)
+
+
+def _dsilu(z):
+    s = jax.nn.sigmoid(z)
+    return s * (1.0 + z * (1.0 - s))
+
+
+# tanh-approximate gelu (jax.nn.gelu's default), with its exact derivative
+_C = 0.7978845608028654  # sqrt(2/pi)
+_A = 0.044715
+
+
+def _gelu(z):
+    return 0.5 * z * (1.0 + jnp.tanh(_C * (z + _A * z * z * z)))
+
+
+def _dgelu(z):
+    t = jnp.tanh(_C * (z + _A * z * z * z))
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * _C * (1.0 + 3.0 * _A * z * z)
+
+
+def _relu2(z):
+    return jnp.square(jnp.maximum(z, 0.0))
+
+
+def _drelu2(z):
+    return 2.0 * jnp.maximum(z, 0.0)
+
+
+# mlp_type -> (activation, derivative); swiglu's activation gates w_gate's GEMM
+ACTS = {
+    "swiglu": (_silu, _dsilu),
+    "gelu": (_gelu, _dgelu),
+    "relu2": (_relu2, _drelu2),
+}
+
+
+def fused_mlp_hidden_ref(x, w_gate, w_up, mlp_type: str = "swiglu"):
+    """x: (m, h); w_gate (gated only), w_up: (h, f).  Returns (m, f)."""
+    act, _ = ACTS[mlp_type]
+    u = jnp.dot(x.astype(jnp.float32), w_up.astype(jnp.float32))
+    if is_gated(mlp_type):
+        g = jnp.dot(x.astype(jnp.float32), w_gate.astype(jnp.float32))
+        return (act(g) * u).astype(x.dtype)
+    return act(u).astype(x.dtype)

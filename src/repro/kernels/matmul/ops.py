@@ -51,14 +51,20 @@ def matmul(a: jax.Array, b: jax.Array, *,
            block_m: int = 128, block_n: int = 128, block_k: int = 128,
            interpret: bool = True, use_pallas: bool = True,
            tuned: bool = False, hw_name: Optional[str] = None) -> jax.Array:
-    """C = A @ B.  use_pallas=False falls back to the jnp oracle (the
-    CPU-container default for model code; kernels are TPU-targeted and
-    validated in interpret mode).
+    """C = A @ B.  A: (..., k) — leading dims are flattened into one m axis
+    and restored on the output, so a (b, s, h) activation keys the tuning
+    cache as (b*s, h, n), the exact shape `autotune_matmul` writes (a
+    >2-D A used to miss the cache silently).  use_pallas=False falls back
+    to the jnp oracle (the CPU-container default for model code; kernels
+    are TPU-targeted and validated in interpret mode).
 
     tuned=True overrides block_* with the autotuning cache's measured-best
     config for this (m, k, n, dtype, hw) when one exists (cache misses keep
     the defaults).  The lookup runs at trace time, outside the jit.
     """
+    lead = a.shape[:-1]
+    if a.ndim != 2:
+        a = a.reshape(-1, a.shape[-1])
     if tuned and use_pallas:
         m, k = a.shape
         _, n = b.shape
@@ -68,16 +74,24 @@ def matmul(a: jax.Array, b: jax.Array, *,
             block_m = cfg.blocks["block_m"]
             block_n = cfg.blocks["block_n"]
             block_k = cfg.blocks["block_k"]
-    return _matmul_jit(a, b, block_m=block_m, block_n=block_n,
-                       block_k=block_k, interpret=interpret,
-                       use_pallas=use_pallas)
+    out = _matmul_jit(a, b, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=interpret,
+                      use_pallas=use_pallas)
+    return out if len(lead) == 1 else out.reshape(*lead, b.shape[-1])
 
 
-def alignment_report(m: int, k: int, n: int, dtype_bytes: int = 2,
-                     hw_name: str = "tpu_v5e") -> dict:
-    hw = get_hardware(hw_name)
+def alignment_report(m: int, k: int, n: int, dtype=jnp.bfloat16,
+                     hw_name: Optional[str] = None) -> dict:
+    """Tile-alignment report for an (m, k, n) GEMM.  `dtype` (an array dtype,
+    not a byte count) and `hw_name` default to the benchmark dtype and
+    `get_hardware()`'s default chip; callers on other hardware thread their
+    own through."""
+    hw = get_hardware(hw_name) if hw_name else get_hardware()
+    dtype_bytes = jnp.dtype(dtype).itemsize
     util = tile_utilization(m, n, k, hw, dtype_bytes)
     return {
+        "hw_name": hw.name,
+        "dtype": jnp.dtype(dtype).name,
         "mxu_utilization": util,
         "padded_shape": (round_up(m, 128), round_up(k, 128), round_up(n, 128)),
         "aligned": util > 0.999,

@@ -37,6 +37,8 @@ def build(args):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.attn_impl:
         cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
+    if args.linear_impl:
+        cfg = dataclasses.replace(cfg, linear_impl=args.linear_impl)
     mesh_cfg = MeshConfig(data=args.data, model=args.model)
     shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
     tc = TrainConfig(total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
@@ -60,6 +62,11 @@ def main(argv=None):
     ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
     ap.add_argument("--attn-impl", default=None,
                     choices=[None, "naive", "blocked", "flash"])
+    ap.add_argument("--linear-impl", default=None,
+                    choices=[None, "jnp", "pallas", "tuned", "fused"],
+                    help="dispatch for every dense projection GEMM "
+                         "(repro.models.linear); fused = Pallas fused "
+                         "SwiGLU/MLP kernel + tuned matmuls")
     ap.add_argument("--microbatch", type=int, default=0, help="per-device rows; 0=no accumulation")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")

@@ -1,6 +1,9 @@
 """Pure-JAX model zoo: dense GQA, MLA, MoE, SSD/Mamba2, hybrid, enc-dec, VLM."""
 from .lm import apply_lm, init_lm, init_caches, lm_loss, softmax_xent, apply_encoder
 from .blocks import stack_plan
+from .linear import (LINEAR_IMPLS, expert_linear, fused_mlp, linear,
+                     resolve_impl)
 
 __all__ = ["apply_lm", "init_lm", "init_caches", "lm_loss", "softmax_xent",
-           "apply_encoder", "stack_plan"]
+           "apply_encoder", "stack_plan", "LINEAR_IMPLS", "expert_linear",
+           "fused_mlp", "linear", "resolve_impl"]

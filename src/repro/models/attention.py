@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .layers import apply_rotary, dense_init
+from .linear import linear, resolve_impl
 
 NEG_INF = -1e30
 
@@ -99,10 +100,11 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
     """
     b, s, h = x.shape
     a, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    impl = resolve_impl(cfg)
     src = x if kv_input is None else kv_input
-    q = x @ p["wq"].astype(x.dtype)
-    k = src @ p["wk"].astype(x.dtype)
-    v = src @ p["wv"].astype(x.dtype)
+    q = linear(x, p["wq"], impl=impl)
+    k = linear(src, p["wk"], impl=impl)
+    v = linear(src, p["wv"], impl=impl)
     if cfg.qkv_bias:
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
@@ -160,7 +162,7 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
         out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype),
                     causal=causal and kv_input is None,
                     q_pos=q_pos, kv_len=kv_len, seq_sharded=is_decode)
-    out = out.reshape(b, s, a * hd) @ p["wo"].astype(x.dtype)
+    out = linear(out.reshape(b, s, a * hd), p["wo"], impl=impl)
     return out, new_cache
 
 
@@ -194,12 +196,13 @@ def apply_mla(p, x, cfg: ModelConfig, *, positions, cache=None, cache_index=None
     a = cfg.num_heads
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    q = (x @ p["wq_down"].astype(x.dtype)) @ p["wq_up"].astype(x.dtype)
+    impl = resolve_impl(cfg)
+    q = linear(linear(x, p["wq_down"], impl=impl), p["wq_up"], impl=impl)
     q = q.reshape(b, s, a, nope + rope)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = apply_rotary(q_rope, positions, cfg.rope_theta)
 
-    latent = x @ p["wkv_down"].astype(x.dtype)  # (b, s, kvr+rope)
+    latent = linear(x, p["wkv_down"], impl=impl)  # (b, s, kvr+rope)
     c_kv, k_rope_flat = latent[..., :kvr], latent[..., kvr:]
     k_rope = apply_rotary(k_rope_flat[..., None, :], positions, cfg.rope_theta)
 
@@ -215,8 +218,8 @@ def apply_mla(p, x, cfg: ModelConfig, *, positions, cache=None, cache_index=None
         kv_len = cache_index + s
 
     skv = c_kv.shape[1]
-    k_nope = (c_kv @ p["wk_up"].astype(x.dtype)).reshape(b, skv, a, nope)
-    v = (c_kv @ p["wv_up"].astype(x.dtype)).reshape(b, skv, a, vd)
+    k_nope = linear(c_kv, p["wk_up"], impl=impl).reshape(b, skv, a, nope)
+    v = linear(c_kv, p["wv_up"], impl=impl).reshape(b, skv, a, vd)
 
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, skv, a, rope))], axis=-1)
@@ -224,7 +227,7 @@ def apply_mla(p, x, cfg: ModelConfig, *, positions, cache=None, cache_index=None
                 q_pos=positions[0] if positions.ndim > 1 else positions,
                 kv_len=kv_len,
                 seq_sharded=(cache is not None and s == 1))
-    out = out.reshape(b, s, a * vd) @ p["wo"].astype(x.dtype)
+    out = linear(out.reshape(b, s, a * vd), p["wo"], impl=impl)
     return out, new_cache
 
 

@@ -71,11 +71,17 @@ def apply_rotary(x, positions, theta: float = 10000.0):
 
 # --- activations ---------------------------------------------------------------------
 
+_ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron-4 squared ReLU
+}
+
+
 def activation(name: str):
-    if name == "gelu":
-        return jax.nn.gelu
-    if name == "silu":
-        return jax.nn.silu
-    if name == "relu2":  # nemotron-4 squared ReLU
-        return lambda x: jnp.square(jax.nn.relu(x))
-    raise ValueError(name)
+    try:
+        return _ACTIVATIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown activation {name!r}; valid: {sorted(_ACTIVATIONS)}"
+        ) from None

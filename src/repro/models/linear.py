@@ -1,0 +1,154 @@
+"""Unified linear-execution layer: every model GEMM routes through here.
+
+The paper's thesis is that transformer throughput is decided by the shapes
+of a handful of GEMMs; this module is the single chokepoint where those
+GEMMs actually execute, so tile-quantization waste is paid (and measured) in
+one place.  `linear` flattens (b, s, h) activations to 2-D — producing the
+exact (m, k, n) key the autotuner writes — and selects the execution path
+from `ModelConfig.linear_impl` (mirroring `attn_impl`):
+
+  "jnp"    — XLA `x @ w` (CPU/dry-run default; identical to the pre-refactor
+             inline GEMMs, including gradients)
+  "pallas" — the tile-aligned Pallas matmul kernel at its 128^3 defaults
+  "tuned"  — Pallas + per-(m, k, n, dtype, hw) autotuning-cache blocks
+  "fused"  — tuned dispatch everywhere, plus the fused SwiGLU/MLP Pallas
+             kernel (kernels/fused_mlp) for the MLP gate/up pair
+
+The Pallas paths carry a `jax.custom_vjp` whose backward routes the dgrad
+and wgrad GEMMs back through the same dispatch — transposed shapes make
+their own cache lookups, so forward and backward tile geometries tune
+independently (as with flash attention's split fwd/bwd entries).
+
+Weight casting to the activation dtype happens here (params are f32 master
+copies), so call sites pass raw param leaves.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import default_interpret
+from ..kernels.fused_mlp.ops import fused_mlp_hidden
+from ..kernels.matmul.ops import matmul
+
+LINEAR_IMPLS = ("jnp", "pallas", "tuned", "fused")
+
+
+def resolve_impl(cfg) -> str:
+    """ModelConfig -> linear_impl, tolerating configs predating the field."""
+    return getattr(cfg, "linear_impl", "jnp")
+
+
+def _check_impl(impl: str) -> None:
+    if impl not in LINEAR_IMPLS:
+        raise ValueError(
+            f"unknown linear_impl {impl!r}; valid: {list(LINEAR_IMPLS)}")
+
+
+class _LinearConfig(NamedTuple):
+    """Static dispatch config threaded through the custom_vjp (hashable)."""
+    tuned: bool
+    interpret: bool
+    hw_name: Optional[str]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pallas_linear(cfg: _LinearConfig, x2, w):
+    return matmul(x2, w, tuned=cfg.tuned, interpret=cfg.interpret,
+                  hw_name=cfg.hw_name)
+
+
+def _pallas_linear_fwd(cfg, x2, w):
+    return _pallas_linear(cfg, x2, w), (x2, w)
+
+
+def _pallas_linear_bwd(cfg, res, g):
+    x2, w = res
+    # both transposed GEMMs stay on the Pallas path and key the cache with
+    # their own (m, k, n): dgrad (m, n, k) and wgrad (k, m, n) tune
+    # independently of the forward
+    dx = matmul(g, w.T, tuned=cfg.tuned, interpret=cfg.interpret,
+                hw_name=cfg.hw_name)
+    dw = matmul(x2.T, g, tuned=cfg.tuned, interpret=cfg.interpret,
+                hw_name=cfg.hw_name)
+    return dx.astype(x2.dtype), dw.astype(w.dtype)
+
+
+_pallas_linear.defvjp(_pallas_linear_fwd, _pallas_linear_bwd)
+
+
+def linear(x, w, *, impl: str = "jnp", hw_name: Optional[str] = None):
+    """y = x @ w with dispatched execution.  x: (..., k); w: (k, n).
+
+    Flattens the leading dims to one m axis before dispatch, so a (b, s, h)
+    activation keys the tuning cache as (b*s, h, n) — exactly the shape
+    `tuning.search.autotune_matmul` writes (the >2-D cache-miss fix).
+    """
+    _check_impl(impl)
+    w = w.astype(x.dtype)
+    if impl == "jnp":
+        return x @ w
+    lead, k = x.shape[:-1], x.shape[-1]
+    cfg = _LinearConfig(tuned=impl in ("tuned", "fused"),
+                        interpret=default_interpret(), hw_name=hw_name)
+    out = _pallas_linear(cfg, x.reshape(-1, k), w)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def expert_linear(x, w, *, impl: str = "jnp", hw_name: Optional[str] = None):
+    """Batched per-expert GEMM: x (e, m, k) @ w (e, k, n) -> (e, m, n).
+
+    The jnp path keeps the einsum (XLA lowers it to one batched GEMM, the
+    `moe_expert_*` entry core/transformer_gemms enumerates).  Pallas paths
+    run one kernel per expert under `lax.map` — the TPU grid is sequential
+    per core anyway, and every expert shares one (m, k, n) cache key.
+    """
+    _check_impl(impl)
+    w = w.astype(x.dtype)
+    if impl == "jnp":
+        return jnp.einsum("emk,ekn->emn", x, w)
+    cfg = _LinearConfig(tuned=impl in ("tuned", "fused"),
+                        interpret=default_interpret(), hw_name=hw_name)
+    return jax.lax.map(lambda xw: _pallas_linear(cfg, xw[0], xw[1]), (x, w))
+
+
+def fused_mlp(x, p, cfg, *, impl: Optional[str] = None,
+              hw_name: Optional[str] = None):
+    """Full MLP block through the fused Pallas hidden kernel + dispatched
+    down projection.  p: {w_gate (swiglu), w_up, w_down}; x: (..., h).
+
+    The gate/up GEMM pair and the elementwise combine run as ONE Pallas
+    kernel (kernels/fused_mlp) with its recompute-based custom-VJP backward;
+    both the hidden kernel and the down GEMM consult the tuning cache.
+    """
+    impl = impl or resolve_impl(cfg)
+    dt = x.dtype
+    w_gate = p["w_gate"].astype(dt) if cfg.mlp_type == "swiglu" else None
+    hidden = fused_mlp_hidden(
+        x, w_gate, p["w_up"].astype(dt), mlp_type=cfg.mlp_type,
+        tuned=True, interpret=default_interpret(), hw_name=hw_name)
+    return linear(hidden, p["w_down"], impl="tuned", hw_name=hw_name)
+
+
+def expert_fused_hidden(x, w_gate, w_up, *, mlp_type: str,
+                        hw_name: Optional[str] = None):
+    """Per-expert fused hidden: x (e, m, h) with (e, h, f) expert weights ->
+    (e, m, f), one fused kernel per expert under `lax.map` (the MoE
+    counterpart of `fused_mlp`'s hidden half)."""
+    dt = x.dtype
+    interp = default_interpret()
+    wu = w_up.astype(dt)
+    if mlp_type == "swiglu":
+        return jax.lax.map(
+            lambda t: fused_mlp_hidden(t[0], t[1], t[2], mlp_type=mlp_type,
+                                       tuned=True, interpret=interp,
+                                       hw_name=hw_name),
+            (x, w_gate.astype(dt), wu))
+    return jax.lax.map(
+        lambda t: fused_mlp_hidden(t[0], None, t[1], mlp_type=mlp_type,
+                                   tuned=True, interpret=interp,
+                                   hw_name=hw_name),
+        (x, wu))

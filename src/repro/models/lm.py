@@ -23,6 +23,7 @@ from .attention import apply_attention, init_attention
 from .blocks import (apply_stack, init_cache_segment, init_segment,
                      init_shared, stack_plan, _init_one, _apply_core)
 from .layers import compute_dtype, dense_init, embed_init, norm_apply, norm_init
+from .linear import linear, resolve_impl
 
 
 def init_lm(key, cfg: ModelConfig) -> Dict[str, Any]:
@@ -154,7 +155,7 @@ def apply_lm(params, tokens, cfg: ModelConfig, *,
     hidden = x
     x = constrain(norm_apply(params["final_norm"], x, cfg.norm_type), "btd")
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-    logits = constrain(x @ head.astype(dt), "btv")
+    logits = constrain(linear(x, head, impl=resolve_impl(cfg)), "btv")
     if cfg.padded_vocab_size != cfg.vocab_size:
         # mask the padded vocabulary tail (paper §VI-B vocab padding)
         pad_mask = jnp.arange(cfg.padded_vocab_size) < cfg.vocab_size
@@ -203,13 +204,13 @@ def lm_loss(params, batch, cfg: ModelConfig, remat: str = "none"):
         dt = compute_dtype(cfg.dtype)
         emb_next = params["embed"][batch["labels"]].astype(dt)
         mtp_in = jnp.concatenate([hidden.astype(dt), emb_next], axis=-1)
-        mtp_in = mtp_in @ params["mtp"]["proj"].astype(dt)
+        mtp_in = linear(mtp_in, params["mtp"]["proj"], impl=resolve_impl(cfg))
         pos = jnp.arange(mtp_in.shape[1])
         h2, _, _ = _apply_core(params["mtp"]["block"], mtp_in, cfg, "dense",
                                positions=pos)
         h2 = norm_apply(params["mtp"]["norm"], h2, cfg.norm_type)
         head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-        mtp_logits = h2 @ head.astype(dt)
+        mtp_logits = linear(h2, head, impl=resolve_impl(cfg))
         mtp = softmax_xent(mtp_logits[:, :-2], batch["labels"][:, 2:])
         metrics["mtp_loss"] = mtp
         loss = loss + 0.3 * mtp

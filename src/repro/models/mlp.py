@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .layers import activation, dense_init
+from .linear import fused_mlp, linear, resolve_impl
 
 
 def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
@@ -31,10 +32,15 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
 
 
 def apply_mlp(p, x, cfg: ModelConfig):
+    impl = resolve_impl(cfg)
+    if impl == "fused":
+        # gate+up GEMM pair and the silu*mul combine run as ONE Pallas
+        # kernel (kernels/fused_mlp); the down GEMM dispatches tuned
+        return fused_mlp(x, p, cfg)
     if cfg.mlp_type == "swiglu":
-        g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
-        u = x @ p["w_up"].astype(x.dtype)
-        return (g * u) @ p["w_down"].astype(x.dtype)
+        g = jax.nn.silu(linear(x, p["w_gate"], impl=impl))
+        u = linear(x, p["w_up"], impl=impl)
+        return linear(g * u, p["w_down"], impl=impl)
     act = activation("relu2" if cfg.mlp_type == "relu2" else "gelu")
-    u = act(x @ p["w_up"].astype(x.dtype))
-    return u @ p["w_down"].astype(x.dtype)
+    u = act(linear(x, p["w_up"], impl=impl))
+    return linear(u, p["w_down"], impl=impl)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .layers import dense_init
+from .linear import expert_fused_hidden, expert_linear, linear, resolve_impl
 from .mlp import apply_mlp, init_mlp
 
 
@@ -50,8 +51,9 @@ def apply_moe(p, x, cfg: ModelConfig):
     xt = x.reshape(b * s, h)
     t = b * s
     cap = _capacity(t, cfg)
+    impl = resolve_impl(cfg)
 
-    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    logits = linear(xt, p["router"], impl=impl).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gate, idx = jax.lax.top_k(probs, k)  # (t, k)
     gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)  # renormalize
@@ -79,13 +81,20 @@ def apply_moe(p, x, cfg: ModelConfig):
     buf = constrain(buf, "eh").reshape(e, cap, h)
 
     # ---- batched expert GEMMs (E x (cap,h)x(h,f)) ----------------------------
-    if cfg.mlp_type == "swiglu":
-        g = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, p["w_gate"].astype(x.dtype)))
-        u = jnp.einsum("ech,ehf->ecf", buf, p["w_up"].astype(x.dtype))
+    # dispatched through repro.models.linear: jnp keeps the einsum, Pallas
+    # impls run one tuned kernel per expert, and "fused" runs the gate/up
+    # pair + combine as the fused MLP kernel per expert
+    if impl == "fused":
+        hdn = expert_fused_hidden(
+            buf, p.get("w_gate"), p["w_up"],
+            mlp_type="swiglu" if cfg.mlp_type == "swiglu" else "gelu")
+    elif cfg.mlp_type == "swiglu":
+        g = jax.nn.silu(expert_linear(buf, p["w_gate"], impl=impl))
+        u = expert_linear(buf, p["w_up"], impl=impl)
         hdn = g * u
     else:
-        hdn = jax.nn.gelu(jnp.einsum("ech,ehf->ecf", buf, p["w_up"].astype(x.dtype)))
-    out_buf = jnp.einsum("ecf,efh->ech", hdn, p["w_down"].astype(x.dtype))
+        hdn = jax.nn.gelu(expert_linear(buf, p["w_up"], impl=impl))
+    out_buf = expert_linear(hdn, p["w_down"], impl=impl)
     out_buf = out_buf.reshape(e * cap, h)
 
     # ---- gather back + combine ----------------------------------------------

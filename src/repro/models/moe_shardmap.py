@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
+from .linear import expert_fused_hidden, expert_linear, linear, resolve_impl
 from .mlp import apply_mlp
 
 
@@ -53,8 +54,9 @@ def _local_block(cfg: ModelConfig, tp_axis: str):
         e_loc = w_up.shape[0]
         m = jax.lax.axis_index(tp_axis)
         lo = m * e_loc
+        impl = resolve_impl(cfg)
 
-        logits = (xt @ router).astype(jnp.float32)
+        logits = linear(xt, router, impl=impl).astype(jnp.float32)
         probs = jax.nn.softmax(logits, axis=-1)
         gate, idx = jax.lax.top_k(probs, k)                  # (t_loc, k)
         gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
@@ -81,16 +83,18 @@ def _local_block(cfg: ModelConfig, tp_axis: str):
         buf = buf.at[dst].add(jnp.where(keep[:, None], xt[st], 0))
         buf = buf.reshape(e_loc, cap, h)
 
-        # ---- local expert FFN -------------------------------------------
-        if cfg.mlp_type == "swiglu":
-            g = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, w_gate.astype(xt.dtype)))
-            u = jnp.einsum("ech,ehf->ecf", buf, w_up.astype(xt.dtype))
+        # ---- local expert FFN (dispatched through models.linear) ---------
+        if impl == "fused":
+            hdn = expert_fused_hidden(
+                buf, w_gate, w_up,
+                mlp_type="swiglu" if cfg.mlp_type == "swiglu" else "gelu")
+        elif cfg.mlp_type == "swiglu":
+            g = jax.nn.silu(expert_linear(buf, w_gate, impl=impl))
+            u = expert_linear(buf, w_up, impl=impl)
             hdn = g * u
         else:
-            hdn = jax.nn.gelu(jnp.einsum("ech,ehf->ecf", buf,
-                                         w_up.astype(xt.dtype)))
-        out_buf = jnp.einsum("ecf,efh->ech", hdn,
-                             w_down.astype(xt.dtype)).reshape(e_loc * cap, h)
+            hdn = jax.nn.gelu(expert_linear(buf, w_up, impl=impl))
+        out_buf = expert_linear(hdn, w_down, impl=impl).reshape(e_loc * cap, h)
 
         # ---- local combine + ONE psum over the EP axis -------------------
         picked = jnp.where(keep[:, None], out_buf[dst], 0)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .layers import dense_init, norm_apply, norm_init
+from .linear import linear, resolve_impl
 
 
 def _dims(cfg: ModelConfig):
@@ -80,14 +81,15 @@ def apply_ssm(p, x, cfg: ModelConfig, *, state=None):
     Q = min(cfg.ssm_chunk, s)
     dtype = x.dtype
 
-    z = x @ p["in_z"].astype(dtype)
-    u_x = x @ p["in_x"].astype(dtype)
-    u_B = x @ p["in_B"].astype(dtype)
-    u_C = x @ p["in_C"].astype(dtype)
+    impl = resolve_impl(cfg)
+    z = linear(x, p["in_z"], impl=impl)
+    u_x = linear(x, p["in_x"], impl=impl)
+    u_B = linear(x, p["in_B"], impl=impl)
+    u_C = linear(x, p["in_C"], impl=impl)
     xr = _causal_conv(u_x, p["conv_x"].astype(dtype), p["conv_bx"])
     B = _causal_conv(u_B, p["conv_B"].astype(dtype), p["conv_bB"])
     C = _causal_conv(u_C, p["conv_C"].astype(dtype), p["conv_bC"])
-    dt = x @ p["in_dt"].astype(dtype)
+    dt = linear(x, p["in_dt"], impl=impl)
 
     # conv-state tails for prefill -> decode handoff: the last (width-1)
     # pre-activation rows of each conv branch
@@ -165,7 +167,7 @@ def apply_ssm(p, x, cfg: ModelConfig, *, state=None):
     y = y + xin * p["D"].astype(dtype)[None, None, :, None]
     y = y.reshape(b, s, di)[:, :s_orig]
     y = norm_apply(p["norm"], y * jax.nn.silu(z))
-    out = y @ p["out_proj"].astype(dtype)
+    out = linear(y, p["out_proj"], impl=impl)
     return out, (new_state, conv_tails)
 
 
@@ -193,14 +195,15 @@ def decode_ssm(p, x, cfg: ModelConfig, cache):
     di, N, P, nh, g = _dims(cfg)
     dtype = x.dtype
     xt = x[:, 0]
-    z = xt @ p["in_z"].astype(dtype)
-    xr, ncx = _conv_step(cache["conv_x"].astype(dtype), xt @ p["in_x"].astype(dtype),
+    impl = resolve_impl(cfg)
+    z = linear(xt, p["in_z"], impl=impl)
+    xr, ncx = _conv_step(cache["conv_x"].astype(dtype), linear(xt, p["in_x"], impl=impl),
                          p["conv_x"].astype(dtype), p["conv_bx"])
-    B, ncB = _conv_step(cache["conv_B"].astype(dtype), xt @ p["in_B"].astype(dtype),
+    B, ncB = _conv_step(cache["conv_B"].astype(dtype), linear(xt, p["in_B"], impl=impl),
                         p["conv_B"].astype(dtype), p["conv_bB"])
-    C, ncC = _conv_step(cache["conv_C"].astype(dtype), xt @ p["in_C"].astype(dtype),
+    C, ncC = _conv_step(cache["conv_C"].astype(dtype), linear(xt, p["in_C"], impl=impl),
                         p["conv_C"].astype(dtype), p["conv_bC"])
-    dt = xt @ p["in_dt"].astype(dtype)
+    dt = linear(xt, p["in_dt"], impl=impl)
 
     xin = xr.reshape(b, nh, P)
     Bh = jnp.repeat(B.reshape(b, g, N), nh // g, axis=1)
@@ -216,5 +219,5 @@ def decode_ssm(p, x, cfg: ModelConfig, cache):
     y = jnp.einsum("bhnp,bhn->bhp", state, Ch) + xin * p["D"].astype(dtype)[None, :, None]
     y = y.reshape(b, di)
     y = norm_apply(p["norm"], y * jax.nn.silu(z))
-    out = (y @ p["out_proj"].astype(dtype))[:, None]
+    out = linear(y, p["out_proj"], impl=impl)[:, None]
     return out, {"state": state, "conv_x": ncx, "conv_B": ncB, "conv_C": ncC}

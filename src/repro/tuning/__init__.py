@@ -18,12 +18,14 @@ from .cache import (TunedConfig, TuningCache, cache_key, default_cache_path,
                     get_default_cache, lookup, set_default_cache)
 from .candidates import (bucket_steps, flash_backward_candidates,
                          flash_bwd_vmem_bytes, flash_candidates,
-                         flash_vmem_bytes, matmul_candidates,
+                         flash_vmem_bytes, fused_mlp_candidates,
+                         fused_mlp_vmem_bytes, matmul_candidates,
                          matmul_vmem_bytes, paged_decode_candidates)
 from .measure import wall_us
 
 _SEARCH_EXPORTS = ("autotune_matmul", "autotune_flash_attention",
-                   "autotune_flash_backward", "autotune_paged_decode",
+                   "autotune_flash_backward", "autotune_fused_mlp",
+                   "autotune_paged_decode",
                    "flash_op_name", "flash_bwd_op_name")
 
 __all__ = [
@@ -31,6 +33,7 @@ __all__ = [
     "get_default_cache", "lookup", "set_default_cache",
     "bucket_steps", "flash_backward_candidates", "flash_bwd_vmem_bytes",
     "flash_candidates", "flash_vmem_bytes",
+    "fused_mlp_candidates", "fused_mlp_vmem_bytes",
     "matmul_candidates", "matmul_vmem_bytes", "paged_decode_candidates",
     "wall_us", *_SEARCH_EXPORTS,
 ]

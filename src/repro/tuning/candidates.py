@@ -119,18 +119,16 @@ def flash_backward_candidates(seq_q: int, seq_kv: int, head_dim: int,
                           hw, dtype_bytes, max_candidates)
 
 
-def matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
-                      dtype_bytes: int = 2,
-                      max_candidates: int | None = None
-                      ) -> List[Tuple[int, int, int]]:
-    """All (block_m, block_n, block_k) worth timing for an (m, k, n) GEMM.
-
-    Every candidate is tile-aligned (block_m % sublane == 0, block_n and
-    block_k % lane == 0) and fits the VMEM budget.  The default 128^3 config
-    is always present (it is the baseline the measured speedup is quoted
-    against).  Candidates are ordered largest-first: bigger blocks amortize
-    more grid overhead and are usually the winners on real hardware.
-    """
+def _gemm_lattice(m: int, n: int, k: int, vmem_bytes,
+                  hw: Hardware | None, dtype_bytes: int,
+                  max_candidates: int | None) -> List[Tuple[int, int, int]]:
+    """Shared (block_m, block_n, block_k) lattice for the GEMM-shaped sweeps
+    (matmul and the fused MLP hidden): block_m sublane-aligned, block_n and
+    block_k lane-aligned, feasibility decided by the given VMEM model.
+    Candidates are ordered largest-first (bigger blocks amortize more grid
+    overhead and are usually the winners on real hardware) and the 128^3
+    default is always included when it fits — it is the baseline the
+    measured speedup is quoted against."""
     hw = hw or get_hardware()
     sub = sublane_granule(hw, dtype_bytes)
     lane = lane_granule(hw)
@@ -145,11 +143,11 @@ def matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
         for bm in m_steps
         for bn in n_steps
         for bk in k_steps
-        if matmul_vmem_bytes(bm, bn, bk, dtype_bytes) <= hw.sram_bytes
+        if vmem_bytes(bm, bn, bk) <= hw.sram_bytes
     ]
     cands.sort(key=lambda c: -(c[0] * c[1] * c[2]))
     default = (128, 128, 128)
-    if default not in cands and matmul_vmem_bytes(*default, dtype_bytes) <= hw.sram_bytes:
+    if default not in cands and vmem_bytes(*default) <= hw.sram_bytes:
         cands.append(default)
     if max_candidates is not None and len(cands) > max_candidates:
         keep = cands[:max_candidates]
@@ -157,6 +155,54 @@ def matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
             keep[-1] = default
         cands = keep
     return cands
+
+
+def matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
+                      dtype_bytes: int = 2,
+                      max_candidates: int | None = None
+                      ) -> List[Tuple[int, int, int]]:
+    """All (block_m, block_n, block_k) worth timing for an (m, k, n) GEMM.
+
+    Every candidate is tile-aligned (block_m % sublane == 0, block_n and
+    block_k % lane == 0) and fits the VMEM budget (`_gemm_lattice`).
+    """
+    return _gemm_lattice(
+        m, n, k,
+        lambda bm, bn, bk: matmul_vmem_bytes(bm, bn, bk, dtype_bytes),
+        hw, dtype_bytes, max_candidates)
+
+
+def fused_mlp_vmem_bytes(block_m: int, block_f: int, block_k: int,
+                         dtype_bytes: int = 2, gated: bool = True) -> int:
+    """VMEM working set of kernels/fused_mlp forward: double-buffered x and
+    gate/up weight blocks, one f32 accumulator per GEMM of the pair, and the
+    combined hidden output block.  The gated (swiglu) variant streams two
+    weight blocks and keeps two accumulators resident — its feasible region
+    is strictly smaller than a plain matmul's at equal blocks."""
+    nw = 2 if gated else 1
+    x_blk = block_m * block_k * dtype_bytes
+    w_blk = nw * block_k * block_f * dtype_bytes
+    acc = nw * block_m * block_f * 4
+    out = block_m * block_f * dtype_bytes
+    return DOUBLE_BUFFER * (x_blk + w_blk) + acc + out
+
+
+def fused_mlp_candidates(m: int, h: int, f: int, hw: Hardware | None = None,
+                         dtype_bytes: int = 2, gated: bool = True,
+                         max_candidates: int | None = None
+                         ) -> List[Tuple[int, int, int]]:
+    """All (block_m, block_f, block_k) worth timing for an (m, h, f) fused
+    MLP hidden problem (m tokens, h model width, f ffn width).
+
+    Same tile-alignment lattice as `matmul_candidates` (block_m sublane-,
+    block_f/block_k lane-aligned) under the fused-MLP VMEM model; the 128^3
+    default is always included.  The §VII-B hook: an 8h/3 heuristic f pads
+    up to the lattice and the waste shows up in every candidate's timing.
+    """
+    return _gemm_lattice(
+        m, f, h,
+        lambda bm, bn, bk: fused_mlp_vmem_bytes(bm, bn, bk, dtype_bytes, gated),
+        hw, dtype_bytes, max_candidates)
 
 
 def paged_decode_candidates(s_max: int, head_dim: int, group: int = 1,

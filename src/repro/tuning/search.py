@@ -24,12 +24,14 @@ import jax.numpy as jnp
 from ..core.hardware import Hardware, get_hardware
 from .cache import TunedConfig, TuningCache, get_default_cache
 from .candidates import (flash_backward_candidates, flash_candidates,
-                         matmul_candidates, paged_decode_candidates)
+                         fused_mlp_candidates, matmul_candidates,
+                         paged_decode_candidates)
 from .measure import wall_us
 
 DEFAULT_MATMUL_BLOCKS = (128, 128, 128)
 DEFAULT_FLASH_BLOCKS = (128, 128)
 DEFAULT_PAGED_BLOCK_KV = 128
+DEFAULT_FUSED_MLP_BLOCKS = (128, 128, 128)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +90,62 @@ def autotune_matmul(m: int, k: int, n: int, *, dtype=jnp.float32,
         op="matmul", shape=(m, k, n), dtype=_dtype_name(dtype),
         hw_name=hw.name,
         blocks={"block_m": best.blocks[0], "block_n": best.blocks[1],
+                "block_k": best.blocks[2]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials))
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_fused_mlp(m: int, h: int, f: int, *, mlp_type: str = "swiglu",
+                       dtype=jnp.float32, hw: Optional[Hardware] = None,
+                       cache: Optional[TuningCache] = None,
+                       interpret: bool = True, iters: int = 3,
+                       warmup: int = 1,
+                       max_candidates: Optional[int] = None,
+                       verbose: bool = False) -> TunedConfig:
+    """Sweep (block_m, block_f, block_k) for an (m, h, f) fused MLP hidden
+    problem (kernels/fused_mlp); persist and return the measured winner
+    under op "fused_mlp_<mlp_type>".
+
+    `fused_mlp_hidden(tuned=True)` — and therefore `linear_impl="fused"`
+    model MLPs, which flatten (b, s, h) to m = b*s — picks the entry up by
+    the same (m, h, f) key.
+    """
+    from ..kernels.fused_mlp.ops import fused_mlp_hidden, fused_mlp_op_name
+    from ..kernels.fused_mlp.ref import is_gated
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    gated = is_gated(mlp_type)
+    cands = fused_mlp_candidates(m, h, f, hw, dtype_bytes, gated=gated,
+                                 max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, h)).astype(dtype)
+    wg = (jax.random.normal(jax.random.fold_in(key, 1), (h, f)).astype(dtype)
+          if gated else None)
+    wu = jax.random.normal(jax.random.fold_in(key, 2), (h, f)).astype(dtype)
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bm, bf, bk in cands:
+        t = wall_us(
+            lambda x, wu, bm=bm, bf=bf, bk=bk: fused_mlp_hidden(
+                x, wg, wu, mlp_type=mlp_type, block_m=bm, block_f=bf,
+                block_k=bk, interpret=interpret),
+            x, wu, iters=iters, warmup=warmup, jit=False)
+        trials.append(Trial((bm, bf, bk), t))
+        if (bm, bf, bk) == DEFAULT_FUSED_MLP_BLOCKS:
+            baseline_us = t
+        if verbose:
+            print(f"  fused_mlp[{mlp_type}] {m}x{h}x{f} "
+                  f"blocks=({bm},{bf},{bk}): {t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op=fused_mlp_op_name(mlp_type), shape=(m, h, f),
+        dtype=_dtype_name(dtype), hw_name=hw.name,
+        blocks={"block_m": best.blocks[0], "block_f": best.blocks[1],
                 "block_k": best.blocks[2]},
         time_us=best.time_us, baseline_us=baseline_us,
         candidates_tried=len(trials))

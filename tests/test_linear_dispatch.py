@@ -1,0 +1,164 @@
+"""The unified linear-execution layer (repro.models.linear) and the >2-D
+tuned-matmul cache-key regression.
+
+`linear` must flatten (b, s, h) activations to the exact (m, k, n) key the
+autotuner writes (a 3-D operand used to silently miss the cache), agree
+with the jnp oracle on every impl, and differentiate through the Pallas
+custom-VJP path.
+"""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.matmul.ops import matmul
+
+# repro.kernels re-exports the matmul *function*, shadowing the submodule
+# attribute — import the ops module by name for monkeypatching
+matmul_ops = importlib.import_module("repro.kernels.matmul.ops")
+from repro.models.linear import expert_linear, linear
+from repro.tuning import TuningCache, set_default_cache
+
+KEY = jax.random.PRNGKey(3)
+
+
+class TestMatmulNdOperands:
+    def test_3d_matches_2d(self):
+        a = jax.random.normal(KEY, (2, 24, 64))
+        b = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 96))
+        got = matmul(a, b, interpret=True)
+        assert got.shape == (2, 24, 96)
+        want = matmul(a.reshape(48, 64), b, interpret=True).reshape(2, 24, 96)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
+
+    def test_tuned_3d_keys_flattened_shape(self, monkeypatch):
+        # regression: a (b, s, h) operand must consult the cache with the
+        # (b*s, h, n) key autotune_matmul writes, not miss silently
+        seen = []
+        real = matmul_ops._tuning_lookup
+
+        def spy(op, shape, dtype, hw):
+            seen.append((op, tuple(shape)))
+            return real(op, shape, dtype, hw)
+
+        monkeypatch.setattr(matmul_ops, "_tuning_lookup", spy)
+        a = jax.random.normal(KEY, (2, 24, 64))
+        b = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 96))
+        matmul(a, b, tuned=True, interpret=True)
+        assert seen == [("matmul", (48, 64, 96))]
+
+    def test_tuned_3d_uses_cached_blocks(self):
+        from repro.tuning.search import autotune_matmul
+        cache = TuningCache()
+        cfg = autotune_matmul(48, 64, 96, cache=cache, iters=1, warmup=1,
+                              max_candidates=2)
+        assert cfg.shape == (48, 64, 96)
+        set_default_cache(cache)
+        try:
+            a = jax.random.normal(KEY, (2, 24, 64))
+            b = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 96))
+            got = matmul(a, b, tuned=True, interpret=True)
+            want = jnp.einsum("bsk,kn->bsn", a, b)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=2e-4, rtol=2e-5)
+        finally:
+            set_default_cache(None)
+
+
+class TestLinearDispatch:
+    @pytest.mark.parametrize("impl", ["jnp", "pallas", "tuned", "fused"])
+    def test_impl_parity_3d(self, impl):
+        x = jax.random.normal(KEY, (2, 24, 64))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 96))
+        got = linear(x, w, impl=impl)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(jnp.einsum("bsk,kn->bsn", x, w)),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_unknown_impl_raises(self):
+        x = jnp.ones((4, 8))
+        with pytest.raises(ValueError, match="linear_impl"):
+            linear(x, jnp.ones((8, 8)), impl="cuda")
+
+    def test_weight_cast_to_activation_dtype(self):
+        x = jnp.ones((4, 8), jnp.bfloat16)
+        w = jnp.ones((8, 8), jnp.float32)  # f32 master copy
+        assert linear(x, w, impl="jnp").dtype == jnp.bfloat16
+        assert linear(x, w, impl="pallas").dtype == jnp.bfloat16
+
+    def test_pallas_grads_match_jnp(self):
+        x = jax.random.normal(KEY, (2, 16, 64))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 96))
+
+        def loss(impl):
+            return jax.grad(
+                lambda x, w: linear(x, w, impl=impl).sum(), argnums=(0, 1))
+        gx_p, gw_p = loss("pallas")(x, w)
+        gx_j, gw_j = loss("jnp")(x, w)
+        np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_j),
+                                   atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(gw_p), np.asarray(gw_j),
+                                   atol=2e-4, rtol=2e-4)
+
+
+class TestExpertLinear:
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_expert_parity(self, impl):
+        x = jax.random.normal(KEY, (3, 16, 32))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (3, 32, 48))
+        got = expert_linear(x, w, impl=impl)
+        want = jnp.einsum("emk,ekn->emn", x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_expert_grads_match(self):
+        x = jax.random.normal(KEY, (2, 16, 32))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 32, 48))
+
+        def g(impl):
+            return jax.grad(lambda x, w: expert_linear(
+                x, w, impl=impl).sum(), argnums=(0, 1))(x, w)
+        for a, b in zip(g("pallas"), g("jnp")):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-4)
+
+
+class TestModelImplParity:
+    def _cfg(self, **kw):
+        from repro.configs.base import ModelConfig
+        return ModelConfig(name="t", family="dense", num_layers=2,
+                           d_model=128, num_heads=4, num_kv_heads=2,
+                           d_ff=256, vocab_size=512, dtype="float32", **kw)
+
+    def test_pallas_impl_logits_match_jnp(self):
+        import dataclasses
+        from repro.models import apply_lm
+        from repro.models.lm import init_lm
+        cfg = self._cfg()
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, 512)
+        lj, _, _ = apply_lm(params, tokens, cfg)
+        lp, _, _ = apply_lm(params, tokens,
+                            dataclasses.replace(cfg, linear_impl="pallas"))
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lj),
+                                   atol=2e-3, rtol=2e-3)
+
+
+class TestActivationErrors:
+    def test_unknown_activation_lists_valid_names(self):
+        from repro.models.layers import activation
+        with pytest.raises(ValueError) as e:
+            activation("swish")
+        msg = str(e.value)
+        for name in ("gelu", "silu", "relu2"):
+            assert name in msg
+        assert "swish" in msg
+
+    def test_known_activations_still_work(self):
+        from repro.models.layers import activation
+        x = jnp.array([-1.0, 0.5])
+        for name in ("gelu", "silu", "relu2"):
+            assert activation(name)(x).shape == x.shape

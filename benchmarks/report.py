@@ -230,6 +230,8 @@ def serve_section(rows):
     """Serving-engine latency report: aggregate tok/s is not the whole
     story — per-request TTFT and inter-token percentiles are what a serving
     SLO is written against, so they ride alongside (p50/p99)."""
+    prefix_rows = [r for r in rows if "prefix_share" in r]
+    rows = [r for r in rows if "pattern" in r]
     out = ["## §Serving", "",
            "Continuous-batching engine vs static batching "
            "(`benchmarks/serve_engine.py`, CPU smoke scale; both policies "
@@ -256,6 +258,32 @@ def serve_section(rows):
         out.append("**Continuous vs static aggregate tok/s:** "
                    + ", ".join(f"{p} {g:.2f}x" for p, g in gains) + ".")
         out.append("")
+    if prefix_rows:
+        out += prefix_cache_section(prefix_rows)
+    return out
+
+
+def prefix_cache_section(rows):
+    """Prefix-cache (block-table pool) vs the slot pool on a shared-prefix
+    workload: hit rate + the TTFT split between cache-hit and cold requests
+    is the number a system-prompt deployment cares about."""
+    out = ["### Prefix cache (block-table pool vs slot pool)", "",
+           "Shared-prefix workload (`benchmarks/serve_engine.py "
+           "--prefix-share`); outputs asserted token-identical.  "
+           "`ttft hit speedup` is the median per-request TTFT improvement "
+           "of cache-hit requests vs the same requests on the slot pool.",
+           ""]
+    out.append("| engine | share | tok/s | hit rate | TTFT p50 ms "
+               "| TTFT hit p50 ms | TTFT cold p50 ms | ttft hit speedup |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        out.append(
+            f"| {r['engine']} | {r['prefix_share']:.2f} | {r['tok_s']:.1f} "
+            f"| {r['cache_hit_rate']:.2f} | {r['ttft_p50_s']*1e3:.1f} "
+            f"| {r['ttft_hit_p50_s']*1e3:.1f} "
+            f"| {r['ttft_cold_p50_s']*1e3:.1f} "
+            f"| {r.get('ttft_hit_speedup', 0.0):.2f}x |")
+    out.append("")
     return out
 
 

@@ -31,8 +31,9 @@ from ...core.quantization import round_up
 from ...tuning.cache import lookup as _tuning_lookup
 from .backward import flash_attention_bwd_pallas
 from .kernel import flash_attention_pallas
-from .paged import paged_decode_pallas
-from .ref import attention_ref, paged_decode_ref
+from .paged import paged_decode_blocktable_pallas, paged_decode_pallas
+from .ref import (attention_ref, paged_decode_blocktable_ref,
+                  paged_decode_ref)
 
 
 def _fold(x):
@@ -232,3 +233,54 @@ def paged_decode(q, k_pool, v_pool, slot_idx, lengths, *,
     return _paged_jit(q, k_pool, v_pool, slot_idx, lengths,
                       block_kv=block_kv, interpret=interpret,
                       use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret",
+                                             "use_pallas"))
+def _paged_bt_jit(q, k_blocks, v_blocks, block_tables, lengths, *,
+                  block_kv: int, interpret: bool, use_pallas: bool):
+    if not use_pallas:
+        return paged_decode_blocktable_ref(q, k_blocks, v_blocks,
+                                           block_tables, lengths)
+    block_size = k_blocks.shape[1]
+    bkv = min(block_kv, block_size)
+    if block_size % bkv:
+        # clamp to a divisor: the kv tile must stay inside one physical
+        # block (tiles never straddle a page boundary)
+        import math
+        bkv = math.gcd(block_size, bkv)
+    return paged_decode_blocktable_pallas(q, k_blocks, v_blocks,
+                                          block_tables, lengths,
+                                          block_kv=bkv, interpret=interpret)
+
+
+def paged_decode_blocktable(q, k_blocks, v_blocks, block_tables, lengths, *,
+                            block_kv: Optional[int] = None,
+                            interpret: bool = True, use_pallas: bool = True,
+                            tuned: bool = False,
+                            hw_name: Optional[str] = None):
+    """Block-table decode attention over a physical KV block pool.
+
+    q: (b, a, d) — one query token per active request row; k_blocks,
+    v_blocks: (num_blocks, block_size, nkv, d); block_tables: (b,
+    max_blocks) row -> physical block ids; lengths: (b,) live kv entries
+    (0 = dead row -> zero output).  Returns (b, a, d).
+
+    tuned=True overrides block_kv with the autotuning cache's measured-best
+    for this block-pool shape (op "paged_decode_blocktable") when one exists
+    — see `tuning.search.autotune_paged_decode_blocktable`, which sweeps the
+    physical block size jointly and also records the winning pool geometry
+    under op "paged_decode_blocktable_pool" for the engine to consult.
+    """
+    b, a, d = q.shape
+    nb, block_size, nkv, _ = k_blocks.shape
+    if tuned and use_pallas:
+        cfg = _tuning_lookup("paged_decode_blocktable",
+                             (b, nb, block_size, nkv, a, d),
+                             jnp.dtype(q.dtype).name,
+                             hw_name or get_hardware().name)
+        if cfg is not None:
+            block_kv = cfg.blocks["block_kv"]
+    return _paged_bt_jit(q, k_blocks, v_blocks, block_tables, lengths,
+                         block_kv=block_kv or block_size,
+                         interpret=interpret, use_pallas=use_pallas)

@@ -20,6 +20,18 @@ The score tile is (g, block_kv) where g = query heads per kv head: decode
 works at tiny sublane occupancy by construction (the paper's skinny-GEMM
 regime); block_kv is the lane-side knob the autotuner sweeps
 (`tuning.search.autotune_paged_decode`).
+
+`paged_decode_blocktable_pallas` is the block-table variant (vLLM paged
+attention at a real page size): K/V live in a pool of physical blocks of
+`block_size` tokens and row b's logical kv block j comes from
+`block_table[b, j]`.  The scalar-prefetch operands carry `(block_table[b, j],
+lengths[b])`, so the BlockSpec index map gathers each kv tile from an
+arbitrary physical block; the kernel body is shared with the slot variant
+(it only sees logical kv positions).  Here *two* knobs are tile-lattice
+choices the autotuner sweeps jointly: the physical block size (the paging
+granule, a weight on copy/gather cost and sharing granularity) and block_kv
+(the kv tile per grid step, dividing the block size) — see
+`tuning.search.autotune_paged_decode_blocktable`.
 """
 from __future__ import annotations
 
@@ -117,4 +129,75 @@ def paged_decode_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         interpret=interpret,
     )(slot_idx.astype(jnp.int32), lengths.astype(jnp.int32), qh,
       k_pool, v_pool)
+    return out.reshape(b, a, d)
+
+
+def paged_decode_blocktable_pallas(q: jax.Array, k_blocks: jax.Array,
+                                   v_blocks: jax.Array,
+                                   block_tables: jax.Array,
+                                   lengths: jax.Array, *,
+                                   block_kv: int | None = None,
+                                   scale: float | None = None,
+                                   interpret: bool = False) -> jax.Array:
+    """q: (b, a, d) one token per row; k_blocks, v_blocks: (num_blocks,
+    block_size, nkv, d) physical KV block pool; block_tables: (b,
+    max_blocks) int32 — row b's logical kv block j lives in physical block
+    `block_tables[b, j]`; lengths: (b,) live kv per row.
+
+    block_kv (default block_size) must divide block_size; the grid runs
+    max_blocks * block_size/block_kv kv steps per (row, head) and skips
+    steps wholly past `lengths[b]`, so table entries beyond a row's live
+    blocks are never read (callers pad with any valid block id).
+    Returns (b, a, d); rows with length 0 return zeros.
+    """
+    b, a, d = q.shape
+    nb, block_size, nkv, dk = k_blocks.shape
+    bt_rows, max_blocks = block_tables.shape
+    assert d == dk and a % nkv == 0 and bt_rows == b
+    block_kv = block_kv or block_size
+    assert block_size % block_kv == 0, (block_size, block_kv)
+    g = a // nkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    steps_per_block = block_size // block_kv
+    kv_steps = max_blocks * steps_per_block
+    qh = q.reshape(b, nkv, g, d)
+    from jax.experimental.pallas import tpu as pltpu
+
+    def kv_spec():
+        # logical kv step j -> (physical block, tile within block): the
+        # scalar-prefetched table is indexed *inside the index map*, so the
+        # DMA for row bi streams straight from the right physical block
+        return pl.BlockSpec(
+            (1, block_kv, 1, d),
+            lambda bi, h, j, table, lens: (table[bi, j // steps_per_block],
+                                           j % steps_per_block, h, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nkv, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, h, j, table, lens: (bi, h, 0, 0)),
+            kv_spec(),
+            kv_spec(),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, h, j, table, lens: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    # the kernel body is the slot variant's: it reasons purely in logical kv
+    # positions (ki * block_kv + offset vs lengths[b]); only the index maps
+    # above know the physical indirection
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, kv_steps=kv_steps,
+                          block_kv=block_kv, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qh,
+      k_blocks, v_blocks)
     return out.reshape(b, a, d)

@@ -42,3 +42,22 @@ def paged_decode_ref(q, k_pool, v_pool, slot_idx, lengths, scale=None):
     out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
     out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
     return out.reshape(b, a, d).astype(q.dtype)
+
+
+def gather_block_kv(pool, block_tables):
+    """(num_blocks, bs, nkv, d) pool + (b, max_blocks) tables -> contiguous
+    (b, max_blocks*bs, nkv, d) per-row KV (logical layout)."""
+    g = pool[block_tables]                       # (b, max_nb, bs, nkv, d)
+    b, max_nb, bs = g.shape[:3]
+    return g.reshape(b, max_nb * bs, *g.shape[3:])
+
+
+def paged_decode_blocktable_ref(q, k_blocks, v_blocks, block_tables, lengths,
+                                scale=None):
+    """Oracle for the block-table kernel: gather each row's physical blocks
+    into the logical layout, then slot-decode with an identity map."""
+    b = q.shape[0]
+    k = gather_block_kv(k_blocks, block_tables)
+    v = gather_block_kv(v_blocks, block_tables)
+    return paged_decode_ref(q, k, v, jnp.arange(b, dtype=jnp.int32), lengths,
+                            scale=scale)

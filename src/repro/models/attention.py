@@ -88,7 +88,8 @@ def _sdpa(q, k, v, causal: bool, q_pos=None, kv_len=None,
 
 
 def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
-              cache=None, cache_index=None, kv_input=None):
+              cache=None, cache_index=None, kv_input=None,
+              block_tables=None):
     """x: (b, s, h).  Returns (out, new_cache).
 
     cache: dict(k=(b, s_max, kv, hd), v=...) or None.
@@ -97,6 +98,14 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
     write is then a per-row one-hot scatter and requires s == 1, and
     `positions` should be the matching (b, s) per-row positions).
     kv_input: if set, keys/values come from this tensor (cross-attention).
+    block_tables: (b, max_blocks) int32 — switches the cache to the
+    *block-pool* layout (k/v: (num_blocks, block_size, kv, hd)): row b's
+    logical kv block j lives in physical block `block_tables[b, j]`.
+    Requires single-token decode with a (b,) vector cache_index; the new
+    token is scattered into (table[b, ci//bs], ci % bs) — each live row's
+    tail block is private by the pool's copy-on-write discipline, so rows
+    never collide (dead rows all write the pool's garbage block, which is
+    never read).
     """
     b, s, h = x.shape
     a, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -117,6 +126,33 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
         k = apply_rotary(k, positions, cfg.rope_theta)
     new_cache = None
     kv_len = None
+    if block_tables is not None:
+        assert cache is not None and kv_input is None
+        ci = jnp.asarray(cache_index)
+        assert s == 1 and ci.ndim == 1, \
+            "block_tables requires single-token decode with vector cache_index"
+        blk = cache["k"].shape[1]  # physical block size (tokens)
+        rows = jnp.arange(b)
+        phys = block_tables[rows, ci // blk]
+        off = ci % blk
+        kc = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": kc, "v": vc}
+        lengths = (ci + 1).astype(jnp.int32)
+        if cfg.attn_impl == "paged":
+            from ..kernels.flash_attention.ops import (default_interpret,
+                                                       paged_decode_blocktable)
+            out = paged_decode_blocktable(
+                q[:, 0], kc.astype(q.dtype), vc.astype(q.dtype),
+                block_tables, lengths, tuned=True,
+                interpret=default_interpret())[:, None]
+        else:
+            from ..kernels.flash_attention.ref import gather_block_kv
+            out = _sdpa(q, gather_block_kv(kc, block_tables).astype(q.dtype),
+                        gather_block_kv(vc, block_tables).astype(q.dtype),
+                        causal=causal, q_pos=positions, kv_len=lengths)
+        out = linear(out.reshape(b, s, a * hd), p["wo"], impl=impl)
+        return out, new_cache
     if cache is not None and kv_input is None:
         ci = jnp.asarray(cache_index)
         if ci.ndim:  # per-row write positions (serving-engine slot pool)
@@ -239,5 +275,7 @@ def apply_attention(p, x, cfg: ModelConfig, **kw):
     if cfg.attn_type == "mla":
         kw.pop("kv_input", None)
         kw.pop("causal", None)
+        assert kw.pop("block_tables", None) is None, \
+            "block-table KV paging is not supported for MLA"
         return apply_mla(p, x, cfg, **kw)
     return apply_gqa(p, x, cfg, **kw)

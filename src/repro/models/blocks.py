@@ -131,22 +131,26 @@ def init_cache_segment(cfg: ModelConfig, kind: str, n: int, batch: int,
 
 # --- per-kind apply ------------------------------------------------------------------
 
-def _apply_attn_block(p, x, cfg, positions, cache, cache_index):
+def _apply_attn_block(p, x, cfg, positions, cache, cache_index,
+                      block_tables=None):
     h, new_cache = apply_attention(
         p["attn"], norm_apply(p["norm1"], x, cfg.norm_type), cfg,
-        positions=positions, cache=cache, cache_index=cache_index)
+        positions=positions, cache=cache, cache_index=cache_index,
+        block_tables=block_tables)
     return h, new_cache
 
 
 def _apply_core(p, x, cfg: ModelConfig, kind: str, *, positions,
-                cache=None, cache_index=None, shared=None, decode=False):
+                cache=None, cache_index=None, shared=None, decode=False,
+                block_tables=None):
     """One layer.  Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in ("dense", "moe"):
         if cfg.seq_parallel and x.shape[1] > 1:
             from ..parallel.sharding import constrain
             x = constrain(x, "btd_sp")
-        attn_out, new_cache = _apply_attn_block(p, x, cfg, positions, cache, cache_index)
+        attn_out, new_cache = _apply_attn_block(p, x, cfg, positions, cache,
+                                                cache_index, block_tables)
         if cfg.parallel_layers:
             # y = x + Attn(N(x)) + MLP(N(x))   (§VI-C1; same first norm)
             mix_in = norm_apply(p["norm1"], x, cfg.norm_type)
@@ -167,10 +171,12 @@ def _apply_core(p, x, cfg: ModelConfig, kind: str, *, positions,
     if kind == "pair":
         x, c1, a1 = _apply_core(p["moe_blk"], x, cfg, "moe", positions=positions,
                                 cache=None if cache is None else cache["moe_blk"],
-                                cache_index=cache_index, decode=decode)
+                                cache_index=cache_index, decode=decode,
+                                block_tables=block_tables)
         x, c2, a2 = _apply_core(p["dense_blk"], x, cfg, "dense", positions=positions,
                                 cache=None if cache is None else cache["dense_blk"],
-                                cache_index=cache_index, decode=decode)
+                                cache_index=cache_index, decode=decode,
+                                block_tables=block_tables)
         nc = None if cache is None else {"moe_blk": c1, "dense_blk": c2}
         return x, nc, a1 + a2
 
@@ -187,6 +193,8 @@ def _apply_core(p, x, cfg: ModelConfig, kind: str, *, positions,
         return x + y, new_c, aux
 
     if kind == "hybrid_super":
+        assert block_tables is None, \
+            "block-table KV paging does not support ssm/hybrid caches"
         k = cfg.hybrid_attn_every
         new_ssm = [] if cache is not None else None
         for i in range(k):
@@ -224,10 +232,12 @@ def _apply_core(p, x, cfg: ModelConfig, kind: str, *, positions,
 
 def apply_stack(segments_params, cfg: ModelConfig, x, *, positions,
                 caches=None, cache_index=None, decode=False, shared=None,
-                remat: str = "none"):
+                remat: str = "none", block_tables=None):
     """Run all segments.  segments_params: list of (kind, stacked_params).
 
     caches: list aligned with segments (or None).
+    block_tables: (b, max_blocks) block-pool indirection, shared by every
+    layer (scan-closure captured — all layers' kv leaves use one table).
     Returns (x, new_caches, total_aux).
     """
     total_aux = jnp.zeros((), jnp.float32)
@@ -241,7 +251,8 @@ def apply_stack(segments_params, cfg: ModelConfig, x, *, positions,
             p_l, c_l = xs
             h, nc, a = _apply_core(p_l, h, cfg, _kind, positions=positions,
                                    cache=c_l, cache_index=cache_index,
-                                   shared=shared, decode=decode)
+                                   shared=shared, decode=decode,
+                                   block_tables=block_tables)
             return (h, aux + a), nc
 
         if remat == "full":

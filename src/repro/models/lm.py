@@ -101,12 +101,15 @@ def apply_encoder(params, frames, cfg: ModelConfig, remat: str = "none"):
 def apply_lm(params, tokens, cfg: ModelConfig, *,
              positions=None, caches=None, cache_index=None, decode=False,
              remat: str = "none", patch_embeds=None, encoder_frames=None,
-             enc_out=None, return_hidden: bool = False):
+             enc_out=None, return_hidden: bool = False, block_tables=None):
     """tokens: (b, s) int32.  Returns (logits, new_caches, aux, [hidden]).
 
     patch_embeds: (b, n_patches, h) VLM stub — prepended to the token stream.
     encoder_frames: (b, enc_seq, h) whisper stub — runs the encoder.
     enc_out: precomputed encoder output (decode steps reuse it).
+    block_tables: (b, max_blocks) — caches are a physical KV *block pool*
+    (kv leaves (n, num_blocks, block_size, kv, hd)) and row b's logical
+    block j lives at block_tables[b, j]; single-token decode only.
     """
     from ..parallel.sharding import constrain
     dt = compute_dtype(cfg.dtype)
@@ -138,7 +141,7 @@ def apply_lm(params, tokens, cfg: ModelConfig, *,
     x, new_caches, aux = apply_stack(
         segs, cfg, x, positions=positions, caches=caches,
         cache_index=cache_index, decode=decode,
-        shared=params.get("shared"), remat=remat)
+        shared=params.get("shared"), remat=remat, block_tables=block_tables)
 
     # whisper cross-attention: applied as a post-pass per decoder layer would
     # interleave; for the stub we apply the stacked cross-attn blocks after the

@@ -5,17 +5,19 @@ Public surface:
   Request / SamplingParams / Completion / EngineStats — request API
   BucketPolicy / make_policy — tile-aligned shape policy (buckets.py)
   SlotPool                — fixed KV slot pool (kv_pool.py)
+  BlockPool / PagedPool   — block-table KV pool with prefix caching + COW
   synthetic_requests      — workload generator shared with benchmarks
 """
 from .buckets import BucketPolicy, make_policy
 from .engine import Engine
-from .kv_pool import SlotPool
+from .kv_pool import BlockPool, BlockSeq, CowCopy, PagedPool, PoolExhausted, SlotPool
 from .request import Completion, EngineStats, Request, SamplingParams
 from .scheduler import RequestQueue, Scheduler
 from .workload import PATTERNS, synthetic_requests
 
 __all__ = [
     "Engine", "Request", "SamplingParams", "Completion", "EngineStats",
-    "BucketPolicy", "make_policy", "SlotPool", "RequestQueue", "Scheduler",
+    "BucketPolicy", "make_policy", "SlotPool", "BlockPool", "BlockSeq",
+    "CowCopy", "PagedPool", "PoolExhausted", "RequestQueue", "Scheduler",
     "PATTERNS", "synthetic_requests",
 ]

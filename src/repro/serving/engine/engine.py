@@ -35,7 +35,7 @@ from ...core.hardware import Hardware, get_hardware
 from ...models import apply_lm, init_caches
 from ...models.layers import compute_dtype
 from .buckets import BucketPolicy, make_policy
-from .kv_pool import SlotPool
+from .kv_pool import PagedPool, SlotPool
 from .request import Completion, EngineStats, Request
 from .scheduler import RequestQueue, Scheduler
 
@@ -86,6 +86,40 @@ def _make_decode(cfg: ModelConfig):
     return jax.jit(decode, donate_argnums=(2,))
 
 
+def _make_prefix_prefill(cfg: ModelConfig):
+    """Cache-backed suffix prefill for the paged engine.
+
+    (params, tokens (1, bucket), true_len, start, contig) -> (logits, contig)
+
+    `contig` is the row's gathered contiguous (1, seq_max) cache view:
+    positions [0, start) hold live prefix-cache KV, and the suffix tokens are
+    prefilled at cache_index = start (positions start..start+bucket).  A cold
+    prompt is just start = 0 over a garbage view — one program covers both.
+    The view is donated (updated in place, then scattered back to blocks).
+    """
+
+    def prefill(params, tokens, true_len, start, caches):
+        logits, caches, _ = apply_lm(params, tokens, cfg, caches=caches,
+                                     cache_index=start)
+        last = jax.lax.dynamic_slice_in_dim(logits, true_len - 1, 1, axis=1)
+        return last[:, 0], caches
+
+    return jax.jit(prefill, donate_argnums=(4,))
+
+
+def _make_decode_bt(cfg: ModelConfig):
+    """Block-table decode: like `_make_decode` but the caches are a physical
+    block pool and each row's KV is gathered through (tables, pos)."""
+
+    def decode(params, tok, caches, pos, tables):
+        logits, caches, _ = apply_lm(params, tok, cfg, caches=caches,
+                                     cache_index=pos, decode=True,
+                                     block_tables=tables)
+        return logits[:, -1], caches
+
+    return jax.jit(decode, donate_argnums=(2,))
+
+
 def _make_sampler():
     """(logits (n, v), temps, seeds, steps) -> tokens (n,) int32.
 
@@ -115,6 +149,7 @@ class _SlotState:
     last_t_s: float            # engine-clock time of the latest token
     first_token_s: float
     itl_s: List[float]
+    cached_tokens: int = 0     # prompt KV served from the prefix cache
 
 
 class Engine:
@@ -125,7 +160,9 @@ class Engine:
                  max_new: int = 64, hw: Optional[Hardware] = None,
                  policy: Optional[BucketPolicy] = None,
                  use_paged_kernel: bool = False,
-                 grow_batch: bool = False):
+                 grow_batch: bool = False,
+                 prefix_cache: bool = False,
+                 block_size: Optional[int] = None):
         _check_supported(cfg)
         if use_paged_kernel:
             cfg = dataclasses.replace(cfg, attn_impl="paged")
@@ -135,11 +172,24 @@ class Engine:
         self.policy = policy or make_policy(
             cfg, hw, max_batch=max_batch, max_prompt=max_prompt,
             max_seq=max_prompt + max_new, grow_batch=grow_batch)
-        self.pool = SlotPool(cfg, self.policy.num_slots, self.policy.seq_max,
-                             compute_dtype(cfg.dtype))
-        self._prefills = {b: _make_prefill(cfg, self.policy.seq_max)
-                          for b in self.policy.prompt_buckets}
-        self._decode = _make_decode(cfg)
+        self.prefix_cache = prefix_cache
+        if prefix_cache:
+            bs = block_size or self._pick_block_size(hw)
+            self.pool = PagedPool(cfg, self.policy.num_slots,
+                                  self.policy.seq_max,
+                                  compute_dtype(cfg.dtype), block_size=bs)
+            # every admission is a cache-backed *suffix* prefill (a cold
+            # prompt is a suffix at start=0); bucketed on the suffix length
+            pf = _make_prefix_prefill(cfg)
+            self._prefills = {b: pf for b in self.policy.prompt_buckets}
+            self._decode = _make_decode_bt(cfg)
+        else:
+            self.pool = SlotPool(cfg, self.policy.num_slots,
+                                 self.policy.seq_max,
+                                 compute_dtype(cfg.dtype))
+            self._prefills = {b: _make_prefill(cfg, self.policy.seq_max)
+                              for b in self.policy.prompt_buckets}
+            self._decode = _make_decode(cfg)
         self._sample = _make_sampler()
         # per-slot device-facing state (dead slots: token 0, temp 0)
         n = self.policy.num_slots
@@ -149,6 +199,31 @@ class Engine:
         self._steps = np.zeros(n, np.int32)
         self.decode_steps = 0
         self.prefills = 0
+
+    def _pick_block_size(self, hw: Hardware) -> int:
+        """Physical KV block size: a tile-lattice choice, taken from the
+        `paged_decode_blocktable_pool` tuning-cache entry for this pool
+        geometry when one exists (see
+        `tuning.search.autotune_paged_decode_blocktable`), else the smallest
+        lattice divisor of seq_max >= 16 — fine-grained enough to share
+        prefixes, still a whole number of register tiles."""
+        from ...tuning.cache import lookup
+        from ...tuning.candidates import bucket_steps, sublane_granule
+        cfg = self.cfg
+        n, s_max = self.policy.num_slots, self.policy.seq_max
+        dt = jnp.dtype(compute_dtype(cfg.dtype))
+        entry = lookup(
+            "paged_decode_blocktable_pool",
+            (n, n, s_max, cfg.num_kv_heads, cfg.num_heads, cfg.head_dim),
+            dt.name, hw.name)
+        if entry is not None and s_max % entry.blocks["block_size"] == 0:
+            return int(entry.blocks["block_size"])
+        sub = sublane_granule(hw, dt.itemsize)
+        divisors = [b for b in bucket_steps(s_max, sub) if s_max % b == 0]
+        for b in divisors:
+            if b >= 16:
+                return b
+        return divisors[-1] if divisors else s_max
 
     def reset_stats(self) -> None:
         """Zero the step counters.  run() does this itself on entry, so the
@@ -162,8 +237,11 @@ class Engine:
         one decode step (used to express arrival patterns in machine-relative
         units).  First run pays the compiles; the second is the timer."""
         from .request import Request as _Req
-        # gen budget clamped so bucket-wide warm prompts still fit the pool
-        warm = [_Req(rid=i, tokens=np.full(b, 1, np.int32),
+        # gen budget clamped so bucket-wide warm prompts still fit the pool;
+        # distinct token fill per bucket so the prefix cache can't dedupe the
+        # warm prompts — every bucket must compile its full-width (cold)
+        # suffix prefill, not ride an earlier bucket's cached prefix
+        warm = [_Req(rid=i, tokens=np.full(b, 1 + i, np.int32),
                      max_new_tokens=min(4, max(self.policy.seq_max - b, 1)))
                 for i, b in enumerate(self.policy.prompt_buckets)]
         self.run(warm)
@@ -192,18 +270,22 @@ class Engine:
         except ValueError:
             self.pool.release(slot)
             raise
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :req.prompt_len] = req.tokens
-        logits, caches = self._prefills[bucket](
-            self.params, jnp.asarray(padded),
-            jnp.asarray(req.prompt_len, jnp.int32))
+        if self.prefix_cache:
+            logits, cached = self._prefill_paged(req, slot)
+        else:
+            cached = 0
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :req.prompt_len] = req.tokens
+            logits, caches = self._prefills[bucket](
+                self.params, jnp.asarray(padded),
+                jnp.asarray(req.prompt_len, jnp.int32))
+            self.pool.write(slot, caches, req.prompt_len)
         sp = req.sampling
         tok = self._sample(
             logits, jnp.asarray([sp.temperature], jnp.float32),
             jnp.asarray([sp.seed or req.rid], jnp.int32),
             jnp.asarray([0], jnp.int32))
         tok0 = int(np.asarray(tok)[0])
-        self.pool.write(slot, caches, req.prompt_len)
         self.prefills += 1
         t = self._now()
         self._last_tok[slot] = tok0
@@ -211,11 +293,32 @@ class Engine:
         self._seeds[slot] = sp.seed or req.rid
         self._steps[slot] = 1
         st = _SlotState(req=req, generated=[tok0], last_t_s=t,
-                        first_token_s=t, itl_s=[])
+                        first_token_s=t, itl_s=[], cached_tokens=cached)
         if self._finished(st):
             self._complete(slot, st, states, done)
         else:
             states[slot] = st
+
+    def _prefill_paged(self, req: Request, slot: int) -> Tuple[jax.Array, int]:
+        """Paged admission: bind a block table (sharing every cached full
+        prefix block), prefill only the uncached suffix, scatter the new
+        blocks back, and register the prompt's full blocks for future hits.
+        Returns (last-token logits (1, v), cached token count)."""
+        pool: PagedPool = self.pool
+        seq = pool.alloc_sequence(slot, req.tokens)
+        p = seq.num_cached
+        suffix = np.asarray(req.tokens[p:], np.int32)
+        bucket = self.policy.prompt_bucket(len(suffix))
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :len(suffix)] = suffix
+        contig = pool.gather(slot)
+        logits, contig = self._prefills[bucket](
+            self.params, jnp.asarray(padded),
+            jnp.asarray(len(suffix), jnp.int32),
+            jnp.asarray(p, jnp.int32), contig)
+        pool.scatter(slot, contig, p // pool.block_size)
+        pool.commit(slot, req.tokens)
+        return logits, p
 
     def _finished(self, st: _SlotState) -> bool:
         if len(st.generated) >= st.req.max_new_tokens:
@@ -230,7 +333,7 @@ class Engine:
             rid=st.req.rid, prompt_len=st.req.prompt_len,
             tokens=st.generated, arrival_s=st.req.arrival_s,
             first_token_s=st.first_token_s, done_s=self._now(),
-            itl_s=st.itl_s))
+            itl_s=st.itl_s, cached_tokens=st.cached_tokens))
         states.pop(slot, None)
         self._temps[slot] = 0.0
         self.pool.release(slot)
@@ -275,9 +378,19 @@ class Engine:
               done: List[Completion]) -> None:
         """One pool-wide decode step: every live slot advances one token."""
         pos = np.asarray(self.pool.lengths, np.int32)
-        logits, caches = self._decode(
-            self.params, jnp.asarray(self._last_tok[:, None]),
-            self.pool.caches, jnp.asarray(pos))
+        if self.prefix_cache:
+            # make each live row's write position physically writable
+            # (tail-block alloc / copy-on-write) before the device step
+            for slot in states:
+                self.pool.prepare_append(slot)
+            logits, caches = self._decode(
+                self.params, jnp.asarray(self._last_tok[:, None]),
+                self.pool.caches, jnp.asarray(pos),
+                jnp.asarray(self.pool.tables()))
+        else:
+            logits, caches = self._decode(
+                self.params, jnp.asarray(self._last_tok[:, None]),
+                self.pool.caches, jnp.asarray(pos))
         self.pool.caches = caches
         toks = np.asarray(self._sample(
             logits, jnp.asarray(self._temps), jnp.asarray(self._seeds),
@@ -287,7 +400,7 @@ class Engine:
         for slot in list(states):
             st = states[slot]
             tok = int(toks[slot])
-            self.pool.lengths[slot] += 1
+            self.pool.advance(slot)
             self._last_tok[slot] = tok
             self._steps[slot] += 1
             st.generated.append(tok)

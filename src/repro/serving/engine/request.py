@@ -54,6 +54,9 @@ class Completion:
         return self.first_token_s - self.arrival_s
 
     itl_s: List[float] = dataclasses.field(default_factory=list)
+    # prompt tokens whose KV came from the prefix cache (block-table engine;
+    # 0 on the slot pool / a cold prompt) — these skipped prefill entirely
+    cached_tokens: int = 0
 
 
 def _pct(xs: Sequence[float], p: float) -> float:
@@ -73,6 +76,13 @@ class EngineStats:
     ttft_p99_s: float
     itl_p50_s: float
     itl_p99_s: float
+    # prefix-cache accounting (block-table engine; all zero on the slot pool)
+    cache_hit_requests: int = 0   # requests with >= 1 cached prompt token
+    cached_tokens: int = 0        # prompt tokens served from the cache
+    prompt_tokens: int = 0
+    cache_hit_rate: float = 0.0   # cached_tokens / prompt_tokens
+    ttft_hit_p50_s: float = 0.0   # TTFT split: cache-hit vs cold requests
+    ttft_cold_p50_s: float = 0.0
 
     @classmethod
     def collect(cls, completions: Sequence[Completion], wall_s: float,
@@ -80,13 +90,22 @@ class EngineStats:
         gen = sum(len(c.tokens) for c in completions)
         ttfts = [c.ttft_s for c in completions]
         itls = [d for c in completions for d in c.itl_s]
+        cached = sum(c.cached_tokens for c in completions)
+        prompt = sum(c.prompt_len for c in completions)
+        hit_ttfts = [c.ttft_s for c in completions if c.cached_tokens > 0]
+        cold_ttfts = [c.ttft_s for c in completions if c.cached_tokens == 0]
         return cls(
             wall_s=wall_s, total_generated=gen,
             num_requests=len(completions), decode_steps=decode_steps,
             prefills=prefills,
             tok_s=gen / wall_s if wall_s > 0 else 0.0,
             ttft_p50_s=_pct(ttfts, 50), ttft_p99_s=_pct(ttfts, 99),
-            itl_p50_s=_pct(itls, 50), itl_p99_s=_pct(itls, 99))
+            itl_p50_s=_pct(itls, 50), itl_p99_s=_pct(itls, 99),
+            cache_hit_requests=len(hit_ttfts), cached_tokens=cached,
+            prompt_tokens=prompt,
+            cache_hit_rate=cached / prompt if prompt else 0.0,
+            ttft_hit_p50_s=_pct(hit_ttfts, 50),
+            ttft_cold_p50_s=_pct(cold_ttfts, 50))
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)

@@ -31,11 +31,28 @@ def synthetic_requests(num: int, *, pattern: str = "uniform",
                        arrival_gap_steps: float = 1.0,
                        burst_size: int = 4,
                        temperature: float = 0.0,
+                       prefix_share: float = 0.0,
+                       shared_prefix_len: int = 0,
                        seed: int = 0) -> List[Request]:
-    """Build `num` requests following `pattern` (see module docstring)."""
+    """Build `num` requests following `pattern` (see module docstring).
+
+    prefix_share: fraction of requests that open with a common system-prompt
+    prefix of `shared_prefix_len` tokens (default: half of max_prompt) —
+    the realistic serving mix the prefix-cache benchmarks replay.  Sharing
+    requests draw their *tail* from the usual length distribution, so
+    total prompt lengths still exercise the bucket lattice; the remaining
+    (1 - prefix_share) of requests are fully cold.
+    """
     if pattern not in PATTERNS:
         raise ValueError(f"pattern {pattern!r}; have {PATTERNS}")
+    assert 0.0 <= prefix_share <= 1.0, prefix_share
     rng = np.random.RandomState(seed)
+    shared_len = 0
+    shared: np.ndarray = np.zeros(0, np.int32)
+    if prefix_share > 0.0:
+        shared_len = shared_prefix_len or max(max_prompt // 2, 1)
+        assert shared_len < max_prompt, (shared_len, max_prompt)
+        shared = rng.randint(0, vocab, size=shared_len).astype(np.int32)
     reqs: List[Request] = []
     for i in range(num):
         if pattern == "longtail":
@@ -51,7 +68,13 @@ def synthetic_requests(num: int, *, pattern: str = "uniform",
             arrival = (i // burst_size) * arrival_gap_steps * burst_size * step_s
         else:  # uniform, longtail
             arrival = i * arrival_gap_steps * step_s
-        tokens = rng.randint(0, vocab, size=plen).astype(np.int32)
+        shares = prefix_share > 0.0 and rng.rand() < prefix_share
+        if shares:
+            tail = max(plen - shared_len, 1)
+            tokens = np.concatenate(
+                [shared, rng.randint(0, vocab, size=tail).astype(np.int32)])
+        else:
+            tokens = rng.randint(0, vocab, size=plen).astype(np.int32)
         reqs.append(Request(
             rid=i, tokens=tokens, max_new_tokens=gen,
             sampling=SamplingParams(temperature=temperature, seed=1000 + i),

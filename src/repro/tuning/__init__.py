@@ -20,12 +20,14 @@ from .candidates import (bucket_steps, flash_backward_candidates,
                          flash_bwd_vmem_bytes, flash_candidates,
                          flash_vmem_bytes, fused_mlp_candidates,
                          fused_mlp_vmem_bytes, matmul_candidates,
-                         matmul_vmem_bytes, paged_decode_candidates)
+                         matmul_vmem_bytes, paged_blocktable_candidates,
+                         paged_decode_candidates)
 from .measure import wall_us
 
 _SEARCH_EXPORTS = ("autotune_matmul", "autotune_flash_attention",
                    "autotune_flash_backward", "autotune_fused_mlp",
                    "autotune_paged_decode",
+                   "autotune_paged_decode_blocktable",
                    "flash_op_name", "flash_bwd_op_name")
 
 __all__ = [
@@ -34,7 +36,8 @@ __all__ = [
     "bucket_steps", "flash_backward_candidates", "flash_bwd_vmem_bytes",
     "flash_candidates", "flash_vmem_bytes",
     "fused_mlp_candidates", "fused_mlp_vmem_bytes",
-    "matmul_candidates", "matmul_vmem_bytes", "paged_decode_candidates",
+    "matmul_candidates", "matmul_vmem_bytes", "paged_blocktable_candidates",
+    "paged_decode_candidates",
     "wall_us", *_SEARCH_EXPORTS,
 ]
 

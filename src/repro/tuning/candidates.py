@@ -232,6 +232,50 @@ def paged_decode_candidates(s_max: int, head_dim: int, group: int = 1,
     return cands
 
 
+def paged_blocktable_candidates(seq_max: int, head_dim: int, group: int = 1,
+                                hw: Hardware | None = None,
+                                dtype_bytes: int = 2,
+                                max_candidates: int | None = None
+                                ) -> List[Tuple[int, int]]:
+    """(block_size, block_kv) pairs worth timing for the block-table decode
+    kernel — the paging granule and the kv tile are swept *jointly*.
+
+    block_size candidates are power-of-two multiples of the sublane granule
+    that divide seq_max (so a full sequence is a whole number of blocks and
+    the pool capacity proof num_blocks = rows * seq_max/block_size holds);
+    block_kv must divide block_size (a kv tile never straddles a physical
+    block) and fit the streaming VMEM budget at block_q = group.  Larger
+    pairs first: fewer grid steps usually win, but small blocks buy sharing
+    granularity — that tension is exactly what the measurement decides.
+    """
+    hw = hw or get_hardware()
+    sub = sublane_granule(hw, dtype_bytes)
+    sizes = [bs for bs in _steps(seq_max, sub, cap=min(MAX_BLOCK, seq_max))
+             if seq_max % bs == 0]
+    cands = [
+        (bs, bkv)
+        for bs in sizes
+        for bkv in _steps(bs, sub, cap=bs)
+        if bs % bkv == 0
+        and flash_vmem_bytes(group, bkv, head_dim, dtype_bytes)
+        <= hw.sram_bytes
+    ]
+    cands.sort(key=lambda c: (-c[0], -c[1]))
+    if max_candidates is not None and len(cands) > max_candidates:
+        # keep coverage across block sizes rather than the head of the list
+        # (which is all-largest-block): take the biggest bkv per size first
+        by_size: List[Tuple[int, int]] = []
+        seen = set()
+        for bs, bkv in cands:
+            if bs not in seen:
+                by_size.append((bs, bkv))
+                seen.add(bs)
+        rest = [c for c in cands if c not in by_size]
+        cands = (by_size + rest)[:max_candidates]
+        cands.sort(key=lambda c: (-c[0], -c[1]))
+    return cands
+
+
 def _flash_lattice(seq_q: int, seq_kv: int, head_dim: int, vmem_bytes,
                    hw: Hardware | None, dtype_bytes: int,
                    max_candidates: int | None) -> List[Tuple[int, int]]:

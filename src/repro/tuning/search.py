@@ -25,7 +25,7 @@ from ..core.hardware import Hardware, get_hardware
 from .cache import TunedConfig, TuningCache, get_default_cache
 from .candidates import (flash_backward_candidates, flash_candidates,
                          fused_mlp_candidates, matmul_candidates,
-                         paged_decode_candidates)
+                         paged_blocktable_candidates, paged_decode_candidates)
 from .measure import wall_us
 
 DEFAULT_MATMUL_BLOCKS = (128, 128, 128)
@@ -200,6 +200,95 @@ def autotune_paged_decode(batch: int, slots: int, s_max: int, kv_heads: int,
         shape=(batch, slots, s_max, kv_heads, heads, head_dim),
         dtype=_dtype_name(dtype), hw_name=hw.name,
         blocks={"block_kv": best.blocks[0]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials))
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_paged_decode_blocktable(batch: int, num_rows: int, s_max: int,
+                                     kv_heads: int, heads: int,
+                                     head_dim: int, *, dtype=jnp.float32,
+                                     hw: Optional[Hardware] = None,
+                                     cache: Optional[TuningCache] = None,
+                                     interpret: bool = True, iters: int = 3,
+                                     warmup: int = 1,
+                                     max_candidates: Optional[int] = None,
+                                     verbose: bool = False) -> TunedConfig:
+    """Jointly sweep (block_size, block_kv) for the block-table decode kernel
+    over a pool sized for `num_rows` sequences of up to `s_max` tokens.
+
+    Each block_size candidate implies its own pool geometry — num_blocks =
+    num_rows * s_max/block_size physical blocks of block_size tokens — so the
+    paging granule is measured as a real cost (more table indirections per
+    row at small blocks vs. coarser sharing at large ones), not assumed.
+
+    Two kinds of cache entry are written:
+      * op "paged_decode_blocktable_pool", shape (batch, num_rows, s_max,
+        kv_heads, heads, head_dim), blocks {block_size, block_kv} — the
+        engine-level entry `ServeEngine(prefix_cache=True)` consults to pick
+        its physical block size;
+      * op "paged_decode_blocktable", shape (batch, num_blocks, block_size,
+        kv_heads, heads, head_dim), blocks {block_kv} — one per block_size
+        tried (best block_kv at that size), so
+        `paged_decode_blocktable(tuned=True)` hits whatever pool shape the
+        engine ends up running.
+    Returns the pool-level winner.
+    """
+    from ..kernels.flash_attention.ops import paged_decode_blocktable
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    g = heads // kv_heads
+    cands = paged_blocktable_candidates(s_max, head_dim, g, hw, dtype_bytes,
+                                        max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (batch, heads, head_dim)).astype(dtype)
+    lengths = jnp.full((batch,), s_max, jnp.int32)
+
+    trials: List[Trial] = []
+    best_at_size: dict = {}
+    for bs, bkv in cands:
+        max_blocks = s_max // bs
+        nb = num_rows * max_blocks
+        pool_shape = (nb, bs, kv_heads, head_dim)
+        kb = jax.random.normal(jax.random.fold_in(key, 1),
+                               pool_shape).astype(dtype)
+        vb = jax.random.normal(jax.random.fold_in(key, 2),
+                               pool_shape).astype(dtype)
+        tables = (jnp.arange(batch, dtype=jnp.int32)[:, None] * max_blocks
+                  + jnp.arange(max_blocks, dtype=jnp.int32)[None, :]) % nb
+        t = wall_us(
+            lambda q, kb, vb, tb, ln, bs=bs, bkv=bkv: paged_decode_blocktable(
+                q, kb, vb, tb, ln, block_kv=bkv, interpret=interpret),
+            q, kb, vb, tables, lengths, iters=iters, warmup=warmup,
+            jit=False)
+        trials.append(Trial((bs, bkv), t))
+        if bs not in best_at_size or t < best_at_size[bs][1]:
+            best_at_size[bs] = (bkv, t, nb)
+        if verbose:
+            print(f"  paged_bt b{batch} rows{num_rows} s{s_max} kv{kv_heads} "
+                  f"d{head_dim} block_size={bs} block_kv={bkv}: {t:.1f} us")
+    # per-pool-shape entries: the kernel-level tuned lookup
+    for bs, (bkv, t, nb) in best_at_size.items():
+        cache.put(TunedConfig(
+            op="paged_decode_blocktable",
+            shape=(batch, nb, bs, kv_heads, heads, head_dim),
+            dtype=_dtype_name(dtype), hw_name=hw.name,
+            blocks={"block_kv": bkv}, time_us=t, baseline_us=0.0,
+            candidates_tried=sum(1 for tr in trials if tr.blocks[0] == bs)))
+    best = min(trials, key=lambda t: t.time_us)
+    # baseline for the speedup quote: the coarsest paging granule tried
+    # (one block = whole sequence, i.e. the slot-pool layout)
+    bs_max = max(bs for bs, _ in cands)
+    baseline_us = min((t.time_us for t in trials if t.blocks[0] == bs_max),
+                      default=0.0)
+    cfg = TunedConfig(
+        op="paged_decode_blocktable_pool",
+        shape=(batch, num_rows, s_max, kv_heads, heads, head_dim),
+        dtype=_dtype_name(dtype), hw_name=hw.name,
+        blocks={"block_size": best.blocks[0], "block_kv": best.blocks[1]},
         time_us=best.time_us, baseline_us=baseline_us,
         candidates_tried=len(trials))
     cache.put(cfg)

@@ -116,3 +116,84 @@ def test_padded_vocab_invariants(v):
                       num_heads=2, num_kv_heads=2, d_ff=256, vocab_size=v)
     pv = cfg.padded_vocab_size
     assert pv >= v and pv % 128 == 0 and pv - v < 128
+
+
+# -- block pool (prefix cache + copy-on-write) -------------------------------
+#
+# hypothesis drives the pure-host BlockPool state machine with random
+# alloc/fork/append/release programs against a shadow model of every block's
+# contents.  Invariants (also in BlockPool.check, asserted after every op):
+# refcounts are exact, no block is simultaneously free/cached/referenced,
+# free + cached + referenced == total, writes only ever land in refcount-1
+# blocks (copy-on-write), and every live sequence always reads back exactly
+# its own tokens.  A seeded twin of this driver runs without hypothesis in
+# test_prefix_cache.py.
+
+_pool_ops = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 2 ** 16)),
+    min_size=1, max_size=80)
+
+
+@settings(deadline=None, max_examples=25)
+@given(ops=_pool_ops, block_size=st.sampled_from([2, 3, 4]),
+       num_blocks=st.sampled_from([8, 12, 24]))
+def test_block_pool_cow_and_accounting(ops, block_size, num_blocks):
+    from repro.serving.engine import BlockPool, PoolExhausted
+
+    bs, vocab = block_size, 37
+    pool = BlockPool(num_blocks, bs)
+    mem = {b: [None] * bs for b in range(num_blocks)}
+    live = []                                   # (seq, tokens)
+    prefixes = [[(7 * j + k) % vocab for j in range(bs * 2)] for k in (0, 1)]
+
+    def write(seq, pos, tok):
+        blk = seq.table[pos // bs]
+        assert pool.ref[blk] == 1, "write reached a shared block"
+        mem[blk][pos % bs] = tok
+
+    for op, payload in ops:
+        if op == 0:                             # admit a prompt
+            base = prefixes[payload % 2] if payload % 4 else []
+            n_tail = 1 + payload % (2 * bs)
+            tokens = base + [(payload + 13 * i) % vocab
+                             for i in range(n_tail)]
+            try:
+                seq, cows = pool.alloc_sequence(tokens)
+            except PoolExhausted:
+                pool.check()
+                continue
+            for c in cows:
+                mem[c.dst] = list(mem[c.src])
+            p = seq.num_cached
+            for j in range(p // bs):
+                assert mem[seq.table[j]] == tokens[j * bs:(j + 1) * bs]
+            for pos in range(p, len(tokens)):
+                write(seq, pos, tokens[pos])
+            pool.commit(seq, tokens)
+            live.append((seq, list(tokens)))
+        elif op == 1 and live:                  # one decode append
+            seq, tokens = live[payload % len(live)]
+            try:
+                c = pool.prepare_append(seq)
+            except PoolExhausted:
+                pool.check()
+                continue
+            if c is not None:
+                mem[c.dst] = list(mem[c.src])
+            tok = payload % vocab
+            write(seq, seq.length, tok)
+            pool.advance(seq)
+            tokens.append(tok)
+        elif op == 2 and live:                  # fork
+            seq, tokens = live[payload % len(live)]
+            live.append((pool.fork(seq), list(tokens)))
+        elif op == 3 and live:                  # release
+            seq, _ = live.pop(payload % len(live))
+            pool.release(seq)
+        pool.check()
+        for seq, tokens in live:                # sequence isolation
+            for pos in range(seq.length):
+                assert mem[seq.table[pos // bs]][pos % bs] == tokens[pos]
+    assert all(r >= 0 for r in pool.ref)
+    assert (pool.num_free_blocks + pool.num_cached_blocks
+            + pool.num_referenced_blocks == num_blocks)

@@ -170,6 +170,27 @@ class TestEngineParity:
         assert all(0 <= t < cfg.padded_vocab_size
                    for c in d1 for t in c.tokens)
 
+    def test_slot_reuse_never_leaks_stale_kv(self, smoke_lm):
+        """Regression: a released slot keeps its KV bytes (release only zeros
+        the length); the next occupant must never attend the previous
+        occupant's tokens.  Fill every slot deep, then re-occupy every slot
+        shallow and decode past the prompt — any leak changes the tokens."""
+        cfg, params = smoke_lm
+        eng = Engine(params, cfg, max_batch=2, max_prompt=32, max_new=8)
+        n = eng.policy.num_slots
+        rng = np.random.RandomState(3)
+        deep = [Request(rid=i, tokens=rng.randint(
+                    0, cfg.vocab_size, size=28).astype(np.int32),
+                    max_new_tokens=2) for i in range(n)]
+        eng.run(deep)
+        assert eng.pool.num_free == n
+        assert all(l == 0 for l in eng.pool.lengths)
+        shallow = [Request(rid=100 + i, tokens=rng.randint(
+                       0, cfg.vocab_size, size=4).astype(np.int32),
+                       max_new_tokens=6) for i in range(n)]
+        done, _ = eng.run(shallow)
+        self._check(cfg, params, shallow, done)
+
     def test_unsupported_family_rejected(self):
         cfg = get_smoke_config("mamba2-780m")
         with pytest.raises(NotImplementedError):

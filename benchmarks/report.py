@@ -276,13 +276,33 @@ def prefix_cache_section(rows):
     out.append("| engine | share | tok/s | hit rate | TTFT p50 ms "
                "| TTFT hit p50 ms | TTFT cold p50 ms | ttft hit speedup |")
     out.append("|---|---|---|---|---|---|---|---|")
+    def _ms(v):
+        # hit/cold splits are None when that request class is empty
+        return "n/a" if v is None else f"{v * 1e3:.1f}"
+
     for r in rows:
         out.append(
             f"| {r['engine']} | {r['prefix_share']:.2f} | {r['tok_s']:.1f} "
             f"| {r['cache_hit_rate']:.2f} | {r['ttft_p50_s']*1e3:.1f} "
-            f"| {r['ttft_hit_p50_s']*1e3:.1f} "
-            f"| {r['ttft_cold_p50_s']*1e3:.1f} "
+            f"| {_ms(r['ttft_hit_p50_s'])} "
+            f"| {_ms(r['ttft_cold_p50_s'])} "
             f"| {r.get('ttft_hit_speedup', 0.0):.2f}x |")
+    out.append("")
+    return out
+
+
+def obs_section(dump_dir):
+    """Observability summary (spans / step percentiles / compiles / drift /
+    metrics) from an `obs.export_all` dump — `repro.obs.view` renders it;
+    this section just re-titles it for EXPERIMENTS.md."""
+    from repro.obs import view
+    out = ["## §Observability", "",
+           f"From `{dump_dir}` (written by `repro.launch.serve --obs-dump`; "
+           "drift = analytic/measured-profile prediction vs span-measured "
+           "step time — see docs/observability-guide.md).", ""]
+    # drop render_summary's own H1 title; keep its section structure
+    out += [ln.replace("## ", "### ") for ln in view.render_summary(dump_dir)
+            if not ln.startswith("# ")]
     out.append("")
     return out
 
@@ -298,6 +318,10 @@ def main():
                          "benchmarks.train_attention_sweep")
     ap.add_argument("--mlp-fusion", default=None,
                     help="mlp_fusion.jsonl from benchmarks.mlp_fusion_sweep")
+    ap.add_argument("--obs", default=None, metavar="DUMPDIR",
+                    help="observability dump dir from obs.export_all "
+                         "(e.g. `repro.launch.serve --obs-dump`); embeds the "
+                         "span/compile/drift summary")
     ap.add_argument("--out", default="EXPERIMENTS.md")
     args = ap.parse_args()
 
@@ -320,6 +344,8 @@ def main():
         lines += mlp_fusion_section(_load(args.mlp_fusion))
     if args.serve:
         lines += serve_section(_load(args.serve))
+    if args.obs:
+        lines += obs_section(args.obs)
     with open(args.out, "w") as f:
         f.write("\n".join(lines))
     print(f"wrote {args.out} ({len(lines)} lines)")

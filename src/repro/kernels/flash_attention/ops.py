@@ -26,6 +26,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ... import obs
 from ...core.hardware import get_hardware
 from ...core.quantization import round_up
 from ...tuning.cache import lookup as _tuning_lookup
@@ -149,6 +150,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     (cache misses keep the defaults).  Lookups run at trace time, outside
     the jit.
     """
+    tuned_hit = None
     if tuned and use_pallas:
         b, sq, a, d = q.shape
         skv = k.shape[1]
@@ -156,6 +158,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
         hw = hw_name or get_hardware().name
         op = ("flash_attention_causal" if causal else "flash_attention_full")
         cfg = _tuning_lookup(op, (b, sq, skv, a, d), dtype, hw)
+        tuned_hit = cfg is not None
         if cfg is not None:
             block_q = cfg.blocks["block_q"]
             block_kv = cfg.blocks["block_kv"]
@@ -165,6 +168,13 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
         if cfg_bwd is not None:
             bwd_block_q = cfg_bwd.blocks["block_q"]
             bwd_block_kv = cfg_bwd.blocks["block_kv"]
+    if obs.enabled():
+        obs.record_dispatch(
+            "flash_attention_causal" if causal else "flash_attention_full",
+            impl="pallas" if use_pallas else "jnp", shape=q.shape,
+            blocks={"block_q": block_q,
+                    "block_kv": block_kv} if use_pallas else None,
+            tuned_hit=tuned_hit)
     return _flash_jit(q, k, v, causal=causal, block_q=block_q,
                       block_kv=block_kv, bwd_block_q=bwd_block_q,
                       bwd_block_kv=bwd_block_kv, interpret=interpret,
@@ -222,14 +232,22 @@ def paged_decode(q, k_pool, v_pool, slot_idx, lengths, *,
     for this pool shape (op "paged_decode") when one exists — see
     `repro.tuning.search.autotune_paged_decode`.
     """
+    tuned_hit = None
     if tuned and use_pallas:
         b, a, d = q.shape
         slots, s_max, nkv, _ = k_pool.shape
         cfg = _tuning_lookup("paged_decode", (b, slots, s_max, nkv, a, d),
                              jnp.dtype(q.dtype).name,
                              hw_name or get_hardware().name)
+        tuned_hit = cfg is not None
         if cfg is not None:
             block_kv = cfg.blocks["block_kv"]
+    if obs.enabled():
+        obs.record_dispatch(
+            "paged_decode", impl="pallas" if use_pallas else "jnp",
+            shape=q.shape,
+            blocks={"block_kv": block_kv} if use_pallas else None,
+            tuned_hit=tuned_hit)
     return _paged_jit(q, k_pool, v_pool, slot_idx, lengths,
                       block_kv=block_kv, interpret=interpret,
                       use_pallas=use_pallas)
@@ -274,13 +292,22 @@ def paged_decode_blocktable(q, k_blocks, v_blocks, block_tables, lengths, *,
     """
     b, a, d = q.shape
     nb, block_size, nkv, _ = k_blocks.shape
+    tuned_hit = None
     if tuned and use_pallas:
         cfg = _tuning_lookup("paged_decode_blocktable",
                              (b, nb, block_size, nkv, a, d),
                              jnp.dtype(q.dtype).name,
                              hw_name or get_hardware().name)
+        tuned_hit = cfg is not None
         if cfg is not None:
             block_kv = cfg.blocks["block_kv"]
+    if obs.enabled():
+        obs.record_dispatch(
+            "paged_decode_blocktable",
+            impl="pallas" if use_pallas else "jnp", shape=q.shape,
+            blocks={"block_kv": block_kv or block_size,
+                    "block_size": block_size} if use_pallas else None,
+            tuned_hit=tuned_hit)
     return _paged_bt_jit(q, k_blocks, v_blocks, block_tables, lengths,
                          block_kv=block_kv or block_size,
                          interpret=interpret, use_pallas=use_pallas)

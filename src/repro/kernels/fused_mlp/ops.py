@@ -23,6 +23,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ... import obs
 from ...core.hardware import get_hardware
 from ...core.quantization import round_up
 from ...tuning.cache import lookup as _tuning_lookup
@@ -164,14 +165,23 @@ def fused_mlp_hidden(x, w_gate, w_up, *, mlp_type: str = "swiglu",
         m *= d
     if not is_gated(mlp_type):
         w_gate = None
+    tuned_hit = None
     if tuned and use_pallas:
         cfg = _tuning_lookup(fused_mlp_op_name(mlp_type), (m, h, f),
                              jnp.dtype(x.dtype).name,
                              hw_name or get_hardware().name)
+        tuned_hit = cfg is not None
         if cfg is not None:
             block_m = cfg.blocks["block_m"]
             block_f = cfg.blocks["block_f"]
             block_k = cfg.blocks["block_k"]
+    if obs.enabled():
+        obs.record_dispatch(
+            fused_mlp_op_name(mlp_type),
+            impl="pallas" if use_pallas else "jnp", shape=(m, h, f),
+            blocks={"block_m": block_m, "block_f": block_f,
+                    "block_k": block_k} if use_pallas else None,
+            tuned_hit=tuned_hit)
     out = _fused_jit(x.reshape(m, h), w_gate, w_up, mlp_type=mlp_type,
                      block_m=block_m, block_f=block_f, block_k=block_k,
                      bwd_block_m=bwd_block_m, bwd_block_f=bwd_block_f,

@@ -17,6 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ... import obs
 from ...core.hardware import get_hardware
 from ...core.quantization import round_up, tile_utilization
 from ...tuning.cache import lookup as _tuning_lookup
@@ -65,15 +66,24 @@ def matmul(a: jax.Array, b: jax.Array, *,
     lead = a.shape[:-1]
     if a.ndim != 2:
         a = a.reshape(-1, a.shape[-1])
+    tuned_hit = None
     if tuned and use_pallas:
         m, k = a.shape
         _, n = b.shape
         cfg = _tuning_lookup("matmul", (m, k, n), jnp.dtype(a.dtype).name,
                              hw_name or get_hardware().name)
+        tuned_hit = cfg is not None
         if cfg is not None:
             block_m = cfg.blocks["block_m"]
             block_n = cfg.blocks["block_n"]
             block_k = cfg.blocks["block_k"]
+    if obs.enabled():
+        obs.record_dispatch(
+            "matmul", impl="pallas" if use_pallas else "jnp",
+            shape=(a.shape[0], a.shape[1], b.shape[-1]),
+            blocks={"block_m": block_m, "block_n": block_n,
+                    "block_k": block_k} if use_pallas else None,
+            tuned_hit=tuned_hit)
     out = _matmul_jit(a, b, block_m=block_m, block_n=block_n,
                       block_k=block_k, interpret=interpret,
                       use_pallas=use_pallas)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..configs.registry import get_config, get_smoke_config
 from ..data.pipeline import synthetic_tokens
 from ..models import init_lm
@@ -70,9 +71,16 @@ def run_engine(cfg, params, args) -> None:
     """Continuous-batching engine over a synthetic request stream."""
     from ..serving.engine import Engine, synthetic_requests
 
+    if args.obs_dump:
+        obs.enable()
+    watch = None
+    if args.watchdog:
+        watch = obs.CompileWatch().install()
+
     eng = Engine(params, cfg, max_batch=args.batch,
                  max_prompt=args.prompt_len, max_new=args.gen,
-                 use_paged_kernel=args.paged, grow_batch=args.grow_batch)
+                 use_paged_kernel=args.paged, grow_batch=args.grow_batch,
+                 prefix_cache=args.prefix_cache)
     pol = eng.policy
     print(f"bucket policy: {pol.num_slots} slots x {pol.seq_max} kv depth, "
           f"prompt buckets {list(pol.prompt_buckets)} "
@@ -81,6 +89,11 @@ def run_engine(cfg, params, args) -> None:
     # compile warmup + one decode-step timing, so arrival patterns are
     # expressed in machine-relative units
     step_s = eng.calibrate_step_s()
+    if watch is not None:
+        # every program is now compiled; steady-state serving must not re-jit
+        print(f"watchdog: {len(watch.records)} compiles during warmup; "
+              f"arming — any further compile fails the run")
+        watch.arm()
 
     reqs = synthetic_requests(
         args.requests, pattern=args.arrival, min_prompt=4,
@@ -89,6 +102,10 @@ def run_engine(cfg, params, args) -> None:
         temperature=args.temperature, seed=args.seed)
     done, stats = eng.run(reqs)
 
+    if watch is not None:
+        watch.check()
+        watch.disarm()
+        print("watchdog: zero unexpected compiles in steady state")
     print(f"served {stats.num_requests} requests "
           f"({stats.total_generated} tokens) in {stats.wall_s*1e3:.0f} ms "
           f"| {stats.prefills} prefills, {stats.decode_steps} decode steps")
@@ -98,6 +115,13 @@ def run_engine(cfg, params, args) -> None:
     print(f"inter-token p50 {stats.itl_p50_s*1e3:8.1f} ms   "
           f"p99 {stats.itl_p99_s*1e3:8.1f} ms")
     print("sample:", done[0].tokens[:16])
+
+    if args.obs_dump:
+        paths = obs.export_all(args.obs_dump, drift=eng.drift, watch=watch)
+        print(f"obs dump: {sorted(paths.values())}")
+        print(f"summarize with: python -m repro.obs.view {args.obs_dump}")
+    if watch is not None:
+        watch.uninstall()
 
 
 def main(argv=None):
@@ -121,6 +145,15 @@ def main(argv=None):
     ap.add_argument("--grow-batch", action="store_true",
                     help="let the advisor grow the slot bucket when the "
                          "calibrated model predicts enough amortization")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="block-table KV pool with content-addressed prefix "
+                         "sharing")
+    ap.add_argument("--obs-dump", default=None, metavar="DIR",
+                    help="enable observability and write trace/metrics/drift "
+                         "dumps to DIR (see `python -m repro.obs.view DIR`)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="record every XLA compile, arm after calibration, "
+                         "and FAIL on any steady-state recompile")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

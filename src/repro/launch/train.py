@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..configs.base import MeshConfig, ShapeConfig, TrainConfig
 from ..configs.registry import get_config, get_smoke_config
 from ..checkpoint.ckpt import Checkpointer
@@ -129,9 +130,17 @@ def main(argv=None):
     tokens_done = 0
     with ctx:
         for step in range(start_step, tc.total_steps):
-            batch = {k: jnp.asarray(v)
-                     for k, v in make_batch(cfg, shape, step, tc.seed).items()}
-            params, opt, metrics = step_fn(params, opt, batch)
+            with obs.span("train_step", cat="train", step=step):
+                batch = {k: jnp.asarray(v)
+                         for k, v in make_batch(cfg, shape, step,
+                                                tc.seed).items()}
+                params, opt, metrics = step_fn(params, opt, batch)
+                if obs.enabled():
+                    jax.block_until_ready(metrics["loss"])
+            if obs.enabled():
+                obs.counter("train.steps").inc()
+                obs.counter("train.tokens").inc(
+                    shape.global_batch * shape.seq_len)
             tokens_done += shape.global_batch * shape.seq_len
             if step % args.log_every == 0 or step == tc.total_steps - 1:
                 loss = float(metrics["loss"])

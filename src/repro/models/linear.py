@@ -88,14 +88,18 @@ def linear(x, w, *, impl: str = "jnp", hw_name: Optional[str] = None):
     `tuning.search.autotune_matmul` writes (the >2-D cache-miss fix).
     """
     _check_impl(impl)
-    w = w.astype(x.dtype)
-    if impl == "jnp":
-        return x @ w
-    lead, k = x.shape[:-1], x.shape[-1]
-    cfg = _LinearConfig(tuned=impl in ("tuned", "fused"),
-                        interpret=default_interpret(), hw_name=hw_name)
-    out = _pallas_linear(cfg, x.reshape(-1, k), w)
-    return out.reshape(*lead, w.shape[-1])
+    # named_scope is trace-time HLO metadata only (no runtime cost and no
+    # program divergence when obs toggles), so it is applied unconditionally:
+    # XLA profiles attribute every GEMM to its dispatch impl
+    with jax.named_scope(f"linear_{impl}"):
+        w = w.astype(x.dtype)
+        if impl == "jnp":
+            return x @ w
+        lead, k = x.shape[:-1], x.shape[-1]
+        cfg = _LinearConfig(tuned=impl in ("tuned", "fused"),
+                            interpret=default_interpret(), hw_name=hw_name)
+        out = _pallas_linear(cfg, x.reshape(-1, k), w)
+        return out.reshape(*lead, w.shape[-1])
 
 
 def expert_linear(x, w, *, impl: str = "jnp", hw_name: Optional[str] = None):
@@ -107,12 +111,14 @@ def expert_linear(x, w, *, impl: str = "jnp", hw_name: Optional[str] = None):
     per core anyway, and every expert shares one (m, k, n) cache key.
     """
     _check_impl(impl)
-    w = w.astype(x.dtype)
-    if impl == "jnp":
-        return jnp.einsum("emk,ekn->emn", x, w)
-    cfg = _LinearConfig(tuned=impl in ("tuned", "fused"),
-                        interpret=default_interpret(), hw_name=hw_name)
-    return jax.lax.map(lambda xw: _pallas_linear(cfg, xw[0], xw[1]), (x, w))
+    with jax.named_scope(f"expert_linear_{impl}"):
+        w = w.astype(x.dtype)
+        if impl == "jnp":
+            return jnp.einsum("emk,ekn->emn", x, w)
+        cfg = _LinearConfig(tuned=impl in ("tuned", "fused"),
+                            interpret=default_interpret(), hw_name=hw_name)
+        return jax.lax.map(lambda xw: _pallas_linear(cfg, xw[0], xw[1]),
+                           (x, w))
 
 
 def fused_mlp(x, p, cfg, *, impl: Optional[str] = None,
@@ -126,11 +132,12 @@ def fused_mlp(x, p, cfg, *, impl: Optional[str] = None,
     """
     impl = impl or resolve_impl(cfg)
     dt = x.dtype
-    w_gate = p["w_gate"].astype(dt) if cfg.mlp_type == "swiglu" else None
-    hidden = fused_mlp_hidden(
-        x, w_gate, p["w_up"].astype(dt), mlp_type=cfg.mlp_type,
-        tuned=True, interpret=default_interpret(), hw_name=hw_name)
-    return linear(hidden, p["w_down"], impl="tuned", hw_name=hw_name)
+    with jax.named_scope("fused_mlp"):
+        w_gate = p["w_gate"].astype(dt) if cfg.mlp_type == "swiglu" else None
+        hidden = fused_mlp_hidden(
+            x, w_gate, p["w_up"].astype(dt), mlp_type=cfg.mlp_type,
+            tuned=True, interpret=default_interpret(), hw_name=hw_name)
+        return linear(hidden, p["w_down"], impl="tuned", hw_name=hw_name)
 
 
 def expert_fused_hidden(x, w_gate, w_up, *, mlp_type: str,

@@ -1,0 +1,161 @@
+"""Observability layer: span tracing, metrics, recompile watchdog, drift.
+
+The paper's argument is a *measurement* argument — step time attributed to
+shape choices — and this package is where the repo measures itself:
+
+  * `obs.trace`         — nestable host-clock spans, exported as Chrome
+    trace-event JSON (Perfetto-loadable) with `jax.profiler.TraceAnnotation`
+    pass-through for XLA profile attribution;
+  * `obs.metrics`       — counters / gauges / histograms with JSON and
+    Prometheus text snapshots;
+  * `obs.compile_watch` — records every XLA compile and, when armed,
+    *fails* on an unexpected one (the engine's bounded-program invariant,
+    enforced);
+  * `obs.drift`         — predicted (analytic / MeasuredProfile) vs
+    measured step time, per engine program site;
+  * `obs.view`          — `python -m repro.obs.view DUMP_DIR` summarizes a
+    dump (top spans, step percentiles, compile table, drift table).
+
+Everything is OFF by default and zero-cost when disabled: instrumented
+call sites go through the module-level helpers below, which check one
+bool and hand back shared no-op objects — no events, no allocation, no
+device sync.  `obs.enable()` flips the flag (or set REPRO_OBS=1 before
+launch); instrumentation lives strictly outside jitted code, so enabling
+it never changes a traced program.
+
+    from repro import obs
+    obs.enable()
+    ... run the engine / train loop ...
+    obs.export_all("obs_dump", drift=engine.drift)
+    # then: python -m repro.obs.view obs_dump
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+from .compile_watch import CompileRecord, CompileWatch, UnexpectedCompile
+from .drift import DriftMonitor
+from .metrics import REGISTRY, MetricsRegistry
+from .trace import NULL_SPAN, Tracer
+
+__all__ = [
+    "enable", "disable", "enabled", "span", "instant", "counter", "gauge",
+    "histogram", "record_dispatch", "get_tracer", "get_metrics",
+    "export_all", "Tracer", "MetricsRegistry", "CompileWatch",
+    "CompileRecord", "UnexpectedCompile", "DriftMonitor",
+]
+
+_enabled = os.environ.get("REPRO_OBS", "") not in ("", "0")
+_tracer = Tracer()
+
+
+def enable(capacity: Optional[int] = None,
+           annotate_device: bool = True) -> None:
+    """Turn instrumentation on (optionally resizing the trace buffer)."""
+    global _enabled, _tracer
+    if capacity is not None and capacity != _tracer.capacity:
+        _tracer = Tracer(capacity=capacity, annotate_device=annotate_device)
+    else:
+        _tracer.annotate_device = annotate_device
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def get_tracer() -> Tracer:
+    return _tracer
+
+
+def get_metrics() -> MetricsRegistry:
+    return REGISTRY
+
+
+# -- hot-path helpers: one bool check when disabled ---------------------------
+
+
+def span(name: str, cat: str = "engine", **args):
+    """Timed span context manager; shared no-op when disabled."""
+    if not _enabled:
+        return NULL_SPAN
+    return _tracer.span(name, cat, **args)
+
+
+def instant(name: str, cat: str = "engine", **args) -> None:
+    if _enabled:
+        _tracer.instant(name, cat, **args)
+
+
+def counter(name: str):
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str):
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str, sample_cap: int = 1024):
+    return REGISTRY.histogram(name, sample_cap)
+
+
+def record_dispatch(op: str, *, impl: str, shape, site: str = "",
+                    blocks: Optional[Dict[str, int]] = None,
+                    tuned_hit: Optional[bool] = None) -> None:
+    """Annotate one kernel-dispatch decision (op, impl, problem shape, and
+    the chosen block config).  Called from the kernel `ops.py` wrappers at
+    trace/dispatch time — i.e. once per lowered program, not per step — so
+    the dump shows exactly which impl and blocking every model GEMM site
+    ended up with."""
+    if not _enabled:
+        return
+    key = f"dispatch.{op}.{impl}"
+    REGISTRY.counter(key).inc()
+    if tuned_hit is not None:
+        REGISTRY.counter(
+            f"dispatch.{op}.cache_{'hit' if tuned_hit else 'miss'}").inc()
+    _tracer.instant(op, cat="dispatch", impl=impl, site=site,
+                    shape=list(shape), blocks=dict(blocks or {}),
+                    tuned_hit=tuned_hit)
+
+
+# -- export -------------------------------------------------------------------
+
+
+def export_all(dump_dir: str, *, drift: Optional[DriftMonitor] = None,
+               watch: Optional[CompileWatch] = None) -> Dict[str, str]:
+    """Write trace.json / metrics.json / metrics.prom (and drift.json /
+    compiles.json when given) into `dump_dir`; returns the paths written.
+    `python -m repro.obs.view <dump_dir>` summarizes the result."""
+    import json
+
+    os.makedirs(dump_dir, exist_ok=True)
+    paths: Dict[str, str] = {}
+
+    paths["trace"] = os.path.join(dump_dir, "trace.json")
+    _tracer.save(paths["trace"])
+    paths["metrics"] = os.path.join(dump_dir, "metrics.json")
+    REGISTRY.save(paths["metrics"])
+    paths["prometheus"] = os.path.join(dump_dir, "metrics.prom")
+    with open(paths["prometheus"], "w") as f:
+        f.write(REGISTRY.to_prometheus())
+    if drift is not None:
+        paths["drift"] = os.path.join(dump_dir, "drift.json")
+        drift.save(paths["drift"])
+    if watch is not None:
+        paths["compiles"] = os.path.join(dump_dir, "compiles.json")
+        with open(paths["compiles"], "w") as f:
+            json.dump(watch.to_json(), f, indent=2)
+    return paths
+
+
+def reset() -> None:
+    """Clear the trace buffer and metrics registry (test hook)."""
+    _tracer.clear()
+    REGISTRY.clear()

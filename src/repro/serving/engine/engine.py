@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ...configs.base import ModelConfig
 from ...core.hardware import Hardware, get_hardware
 from ...models import apply_lm, init_caches
@@ -169,6 +170,8 @@ class Engine:
         self.params = params
         self.cfg = cfg
         hw = hw or get_hardware()
+        self.hw = hw
+        self.drift: Optional[obs.DriftMonitor] = None
         self.policy = policy or make_policy(
             cfg, hw, max_batch=max_batch, max_prompt=max_prompt,
             max_seq=max_prompt + max_new, grow_batch=grow_batch)
@@ -270,23 +273,36 @@ class Engine:
         except ValueError:
             self.pool.release(slot)
             raise
-        if self.prefix_cache:
-            logits, cached = self._prefill_paged(req, slot)
-        else:
-            cached = 0
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :req.prompt_len] = req.tokens
-            logits, caches = self._prefills[bucket](
-                self.params, jnp.asarray(padded),
-                jnp.asarray(req.prompt_len, jnp.int32))
-            self.pool.write(slot, caches, req.prompt_len)
-        sp = req.sampling
-        tok = self._sample(
-            logits, jnp.asarray([sp.temperature], jnp.float32),
-            jnp.asarray([sp.seed or req.rid], jnp.int32),
-            jnp.asarray([0], jnp.int32))
-        tok0 = int(np.asarray(tok)[0])
+        with obs.span("admit", rid=req.rid, slot=slot,
+                      prompt_len=req.prompt_len, bucket=bucket):
+            if self.prefix_cache:
+                logits, cached = self._prefill_paged(req, slot)
+            else:
+                cached = 0
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :req.prompt_len] = req.tokens
+                with obs.span("prefill", bucket=bucket, rid=req.rid,
+                              cached_tokens=0) as psp:
+                    logits, caches = self._prefills[bucket](
+                        self.params, jnp.asarray(padded),
+                        jnp.asarray(req.prompt_len, jnp.int32))
+                    if obs.enabled():
+                        jax.block_until_ready(logits)
+                if self.drift is not None:
+                    self.drift.observe(f"prefill_{bucket}", psp.dur_s)
+                self.pool.write(slot, caches, req.prompt_len)
+            sp = req.sampling
+            with obs.span("sample", cat="sample", batch=1):
+                tok = self._sample(
+                    logits, jnp.asarray([sp.temperature], jnp.float32),
+                    jnp.asarray([sp.seed or req.rid], jnp.int32),
+                    jnp.asarray([0], jnp.int32))
+                tok0 = int(np.asarray(tok)[0])
         self.prefills += 1
+        if obs.enabled():
+            obs.counter("engine.prefills").inc()
+            obs.counter("engine.tokens_generated").inc()
+            obs.counter("engine.prompt_tokens_cached").inc(cached)
         t = self._now()
         self._last_tok[slot] = tok0
         self._temps[slot] = sp.temperature
@@ -312,12 +328,21 @@ class Engine:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :len(suffix)] = suffix
         contig = pool.gather(slot)
-        logits, contig = self._prefills[bucket](
-            self.params, jnp.asarray(padded),
-            jnp.asarray(len(suffix), jnp.int32),
-            jnp.asarray(p, jnp.int32), contig)
+        with obs.span("prefill", bucket=bucket, rid=req.rid,
+                      cached_tokens=p) as psp:
+            logits, contig = self._prefills[bucket](
+                self.params, jnp.asarray(padded),
+                jnp.asarray(len(suffix), jnp.int32),
+                jnp.asarray(p, jnp.int32), contig)
+            if obs.enabled():
+                jax.block_until_ready(logits)
+        if self.drift is not None and obs.enabled():
+            self.drift.observe(f"prefill_{bucket}", psp.dur_s)
         pool.scatter(slot, contig, p // pool.block_size)
         pool.commit(slot, req.tokens)
+        if obs.enabled():
+            obs.counter("kv.prefix_hit_tokens").inc(p)
+            self._kv_gauges()
         return logits, p
 
     def _finished(self, st: _SlotState) -> bool:
@@ -337,11 +362,25 @@ class Engine:
         states.pop(slot, None)
         self._temps[slot] = 0.0
         self.pool.release(slot)
+        if obs.enabled():
+            obs.counter("engine.requests_completed").inc()
+            obs.instant("complete", rid=st.req.rid, slot=slot,
+                        tokens=len(st.generated))
 
     # -- main loop -----------------------------------------------------------
 
     def _now(self) -> float:
         return time.perf_counter() - self._t0
+
+    def _kv_gauges(self) -> None:
+        """Publish pool occupancy; block-level detail on the paged pool."""
+        obs.gauge("engine.live_slots").set(self.pool.num_active)
+        obs.gauge("engine.free_slots").set(self.pool.num_free)
+        if self.prefix_cache:
+            bp = self.pool.blocks
+            obs.gauge("kv.free_blocks").set(bp.num_free_blocks)
+            obs.gauge("kv.cached_blocks").set(bp.num_cached_blocks)
+            obs.gauge("kv.referenced_blocks").set(bp.num_referenced_blocks)
 
     def run(self, requests: List[Request], *,
             policy: str = "continuous") -> Tuple[List[Completion],
@@ -352,6 +391,9 @@ class Engine:
         for req in requests:
             self._validate(req)  # fail fast, before any slot is committed
         self.reset_stats()  # counters (and stats) are per-run
+        if obs.enabled() and self.drift is None:
+            self.drift = obs.DriftMonitor.for_engine(self.cfg, self.policy,
+                                                     self.hw)
         self._t0 = time.perf_counter()
         queue = RequestQueue(requests)
         sched = Scheduler(queue, self.pool, policy)
@@ -361,6 +403,9 @@ class Engine:
         while not sched.drained:
             for req, slot in sched.admissions(self._now()):
                 self._admit(req, slot, states, done)
+            if obs.enabled():
+                obs.gauge("engine.queue_depth").set(len(queue))
+                self._kv_gauges()
             if not states:
                 nxt = queue.next_arrival_s()
                 if nxt is not None:
@@ -378,23 +423,35 @@ class Engine:
               done: List[Completion]) -> None:
         """One pool-wide decode step: every live slot advances one token."""
         pos = np.asarray(self.pool.lengths, np.int32)
-        if self.prefix_cache:
-            # make each live row's write position physically writable
-            # (tail-block alloc / copy-on-write) before the device step
-            for slot in states:
-                self.pool.prepare_append(slot)
-            logits, caches = self._decode(
-                self.params, jnp.asarray(self._last_tok[:, None]),
-                self.pool.caches, jnp.asarray(pos),
-                jnp.asarray(self.pool.tables()))
-        else:
-            logits, caches = self._decode(
-                self.params, jnp.asarray(self._last_tok[:, None]),
-                self.pool.caches, jnp.asarray(pos))
-        self.pool.caches = caches
-        toks = np.asarray(self._sample(
-            logits, jnp.asarray(self._temps), jnp.asarray(self._seeds),
-            jnp.asarray(self._steps)))
+        with obs.span("decode_step", step=self.decode_steps,
+                      live=len(states),
+                      batch=self.policy.num_slots) as dsp:
+            if self.prefix_cache:
+                # make each live row's write position physically writable
+                # (tail-block alloc / copy-on-write) before the device step
+                with obs.span("prepare_append", cat="kv", live=len(states)):
+                    for slot in states:
+                        self.pool.prepare_append(slot)
+                logits, caches = self._decode(
+                    self.params, jnp.asarray(self._last_tok[:, None]),
+                    self.pool.caches, jnp.asarray(pos),
+                    jnp.asarray(self.pool.tables()))
+            else:
+                logits, caches = self._decode(
+                    self.params, jnp.asarray(self._last_tok[:, None]),
+                    self.pool.caches, jnp.asarray(pos))
+            self.pool.caches = caches
+            with obs.span("sample", cat="sample",
+                          batch=self.policy.num_slots):
+                toks = np.asarray(self._sample(
+                    logits, jnp.asarray(self._temps),
+                    jnp.asarray(self._seeds), jnp.asarray(self._steps)))
+        if self.drift is not None and obs.enabled():
+            self.drift.observe("decode_step", dsp.dur_s)
+        if obs.enabled():
+            obs.counter("engine.decode_steps").inc()
+            obs.counter("engine.tokens_generated").inc(len(states))
+            obs.histogram("engine.decode_step_s").observe(dsp.dur_s)
         self.decode_steps += 1
         t = self._now()
         for slot in list(states):

@@ -63,6 +63,13 @@ def _pct(xs: Sequence[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else 0.0
 
 
+def _pct_or_none(xs: Sequence[float], p: float) -> Optional[float]:
+    """Percentile of a class split that may legitimately be empty (e.g. no
+    cache-hit requests in the run): None, not a fake 0.0 that would read as
+    'instant TTFT' in reports and comparisons."""
+    return _pct(xs, p) if len(xs) else None
+
+
 @dataclasses.dataclass
 class EngineStats:
     """Aggregate + percentile view over a batch of completions."""
@@ -81,8 +88,10 @@ class EngineStats:
     cached_tokens: int = 0        # prompt tokens served from the cache
     prompt_tokens: int = 0
     cache_hit_rate: float = 0.0   # cached_tokens / prompt_tokens
-    ttft_hit_p50_s: float = 0.0   # TTFT split: cache-hit vs cold requests
-    ttft_cold_p50_s: float = 0.0
+    # TTFT split: cache-hit vs cold requests.  None when the class is empty
+    # (no hits / no colds) — a 0.0 here would masquerade as a real latency
+    ttft_hit_p50_s: Optional[float] = None
+    ttft_cold_p50_s: Optional[float] = None
 
     @classmethod
     def collect(cls, completions: Sequence[Completion], wall_s: float,
@@ -104,8 +113,8 @@ class EngineStats:
             cache_hit_requests=len(hit_ttfts), cached_tokens=cached,
             prompt_tokens=prompt,
             cache_hit_rate=cached / prompt if prompt else 0.0,
-            ttft_hit_p50_s=_pct(hit_ttfts, 50),
-            ttft_cold_p50_s=_pct(cold_ttfts, 50))
+            ttft_hit_p50_s=_pct_or_none(hit_ttfts, 50),
+            ttft_cold_p50_s=_pct_or_none(cold_ttfts, 50))
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)

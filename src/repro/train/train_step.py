@@ -50,10 +50,13 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_micro: int = 1,
             lambda x, s: jax.lax.with_sharding_constraint(x, s),
             mb, {k: batch_spec[k] for k in mb})
 
+    # named_scope blocks are trace-time HLO metadata (free at runtime), so
+    # XLA profiles split a step into grad / microbatch / update regions
     def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
         if n_micro == 1:
-            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, constrain(batch))
+            with jax.named_scope("train_grad"):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, constrain(batch))
         else:
             micro = jax.tree.map(
                 lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
@@ -62,16 +65,21 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_micro: int = 1,
 
             def acc(carry, mb):
                 g_acc, l_acc = carry
-                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                    params, constrain(mb))
+                with jax.named_scope("train_microbatch_grad"):
+                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, constrain(mb))
                 g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
                 return (g_acc, l_acc + l), m
 
-            (grads, loss_sum), ms = jax.lax.scan(acc, (g0, jnp.zeros(())), micro)
+            with jax.named_scope("train_grad_accum"):
+                (grads, loss_sum), ms = jax.lax.scan(
+                    acc, (g0, jnp.zeros(())), micro)
             grads = jax.tree.map(lambda g: g / n_micro, grads)
             loss = loss_sum / n_micro
             metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
-        new_params, new_opt, om = apply_updates(params, grads, opt_state, tc)
+        with jax.named_scope("train_update"):
+            new_params, new_opt, om = apply_updates(params, grads, opt_state,
+                                                    tc)
         metrics = dict(metrics)
         metrics.update(om)
         metrics["loss"] = loss

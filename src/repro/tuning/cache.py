@@ -44,6 +44,7 @@ class TunedConfig:
     time_us: float             # best measured wall time per call
     baseline_us: float = 0.0   # measured time of the 128-default config
     candidates_tried: int = 0
+    time_us_std: float = 0.0   # per-iteration std of the winner's timing
 
     @property
     def speedup_vs_default(self) -> float:
@@ -63,7 +64,8 @@ class TunedConfig:
                    blocks={k: int(v) for k, v in d["blocks"].items()},
                    time_us=float(d["time_us"]),
                    baseline_us=float(d.get("baseline_us", 0.0)),
-                   candidates_tried=int(d.get("candidates_tried", 0)))
+                   candidates_tried=int(d.get("candidates_tried", 0)),
+                   time_us_std=float(d.get("time_us_std", 0.0)))
 
 
 def cache_key(op: str, shape: Iterable[int], dtype: str, hw_name: str) -> str:

@@ -5,24 +5,44 @@ delegates here so the autotuner and the benchmark harness measure the same
 way.  On this CPU container, Pallas kernels run in interpret mode and the
 numbers rank candidates *relatively*; on a real TPU the same code times the
 compiled kernels and the cache entries become deployment-grade.
+
+`wall_us(..., return_samples=True)` additionally returns the per-iteration
+samples (each iteration individually synced), so callers can report
+variance: the autotuner records the winner's std in the tuning cache
+(`TunedConfig.time_us_std`) and feeds the samples to the obs histograms —
+a candidate whose mean wins inside the noise band is not a real ranking.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, List, Tuple, Union
 
 import jax
 
 
 def wall_us(fn: Callable, *args, iters: int = 5, warmup: int = 2,
-            jit: bool = True) -> float:
+            jit: bool = True, return_samples: bool = False
+            ) -> "Union[float, Tuple[float, List[float]]]":
     """Mean wall time of `fn(*args)` in microseconds, after `warmup` calls.
 
     `fn` is jitted by default (pass jit=False for already-jitted callables or
-    functions that must not be traced twice)."""
+    functions that must not be traced twice).
+
+    Default path: one sync after the whole loop (back-to-back dispatch, the
+    steady-state number).  With return_samples=True each iteration is timed
+    and synced individually and (mean, samples_us) is returned — slightly
+    more sync overhead per iteration, in exchange for a variance estimate.
+    """
     f = jax.jit(fn) if jit else fn
     for _ in range(max(warmup, 0)):
         jax.block_until_ready(f(*args))
+    if return_samples:
+        samples: List[float] = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*args))
+            samples.append((time.perf_counter() - t0) * 1e6)
+        return sum(samples) / len(samples), samples
     t0 = time.perf_counter()
     out = None
     for _ in range(max(iters, 1)):

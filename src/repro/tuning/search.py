@@ -16,11 +16,13 @@ interpret=False and the cache holds real hardware timings.
 from __future__ import annotations
 
 import dataclasses
+import statistics
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..core.hardware import Hardware, get_hardware
 from .cache import TunedConfig, TuningCache, get_default_cache
 from .candidates import (flash_backward_candidates, flash_candidates,
@@ -38,6 +40,22 @@ DEFAULT_FUSED_MLP_BLOCKS = (128, 128, 128)
 class Trial:
     blocks: Tuple[int, ...]
     time_us: float
+    time_us_std: float = 0.0
+
+
+def _measure(op: str, fn, *args, iters: int, warmup: int,
+             jit: bool = False) -> Tuple[float, float]:
+    """Time one candidate with per-iteration samples: (mean_us, std_us).
+
+    The std rides into `Trial`/`TunedConfig.time_us_std` so a winner whose
+    margin over the runner-up is inside the noise band is visible as such;
+    with obs enabled the raw samples also feed a per-op histogram."""
+    mean, samples = wall_us(fn, *args, iters=iters, warmup=warmup, jit=jit,
+                            return_samples=True)
+    std = statistics.pstdev(samples) if len(samples) > 1 else 0.0
+    if obs.enabled():
+        obs.histogram(f"tuning.{op}.us").observe_many(samples)
+    return mean, std
 
 
 def flash_op_name(causal: bool) -> str:
@@ -75,12 +93,13 @@ def autotune_matmul(m: int, k: int, n: int, *, dtype=jnp.float32,
     trials: List[Trial] = []
     baseline_us = 0.0
     for bm, bn, bk in cands:
-        t = wall_us(
+        t, std = _measure(
+            "matmul",
             lambda a, b, bm=bm, bn=bn, bk=bk: matmul(
                 a, b, block_m=bm, block_n=bn, block_k=bk,
                 interpret=interpret),
-            a, b, iters=iters, warmup=warmup, jit=False)
-        trials.append(Trial((bm, bn, bk), t))
+            a, b, iters=iters, warmup=warmup)
+        trials.append(Trial((bm, bn, bk), t, std))
         if (bm, bn, bk) == DEFAULT_MATMUL_BLOCKS:
             baseline_us = t
         if verbose:
@@ -92,7 +111,7 @@ def autotune_matmul(m: int, k: int, n: int, *, dtype=jnp.float32,
         blocks={"block_m": best.blocks[0], "block_n": best.blocks[1],
                 "block_k": best.blocks[2]},
         time_us=best.time_us, baseline_us=baseline_us,
-        candidates_tried=len(trials))
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
     cache.put(cfg)
     return cfg
 
@@ -130,12 +149,13 @@ def autotune_fused_mlp(m: int, h: int, f: int, *, mlp_type: str = "swiglu",
     trials: List[Trial] = []
     baseline_us = 0.0
     for bm, bf, bk in cands:
-        t = wall_us(
+        t, std = _measure(
+            fused_mlp_op_name(mlp_type),
             lambda x, wu, bm=bm, bf=bf, bk=bk: fused_mlp_hidden(
                 x, wg, wu, mlp_type=mlp_type, block_m=bm, block_f=bf,
                 block_k=bk, interpret=interpret),
-            x, wu, iters=iters, warmup=warmup, jit=False)
-        trials.append(Trial((bm, bf, bk), t))
+            x, wu, iters=iters, warmup=warmup)
+        trials.append(Trial((bm, bf, bk), t, std))
         if (bm, bf, bk) == DEFAULT_FUSED_MLP_BLOCKS:
             baseline_us = t
         if verbose:
@@ -148,7 +168,7 @@ def autotune_fused_mlp(m: int, h: int, f: int, *, mlp_type: str = "swiglu",
         blocks={"block_m": best.blocks[0], "block_f": best.blocks[1],
                 "block_k": best.blocks[2]},
         time_us=best.time_us, baseline_us=baseline_us,
-        candidates_tried=len(trials))
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
     cache.put(cfg)
     return cfg
 
@@ -183,12 +203,12 @@ def autotune_paged_decode(batch: int, slots: int, s_max: int, kv_heads: int,
     trials: List[Trial] = []
     baseline_us = 0.0
     for bkv in cands:
-        t = wall_us(
+        t, std = _measure(
+            "paged_decode",
             lambda q, kp, vp, si, ln, bkv=bkv: paged_decode(
                 q, kp, vp, si, ln, block_kv=bkv, interpret=interpret),
-            q, kp, vp, slot_idx, lengths, iters=iters, warmup=warmup,
-            jit=False)
-        trials.append(Trial((bkv,), t))
+            q, kp, vp, slot_idx, lengths, iters=iters, warmup=warmup)
+        trials.append(Trial((bkv,), t, std))
         if bkv == DEFAULT_PAGED_BLOCK_KV:
             baseline_us = t
         if verbose:
@@ -201,7 +221,7 @@ def autotune_paged_decode(batch: int, slots: int, s_max: int, kv_heads: int,
         dtype=_dtype_name(dtype), hw_name=hw.name,
         blocks={"block_kv": best.blocks[0]},
         time_us=best.time_us, baseline_us=baseline_us,
-        candidates_tried=len(trials))
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
     cache.put(cfg)
     return cfg
 
@@ -259,25 +279,26 @@ def autotune_paged_decode_blocktable(batch: int, num_rows: int, s_max: int,
                                pool_shape).astype(dtype)
         tables = (jnp.arange(batch, dtype=jnp.int32)[:, None] * max_blocks
                   + jnp.arange(max_blocks, dtype=jnp.int32)[None, :]) % nb
-        t = wall_us(
+        t, std = _measure(
+            "paged_decode_blocktable",
             lambda q, kb, vb, tb, ln, bs=bs, bkv=bkv: paged_decode_blocktable(
                 q, kb, vb, tb, ln, block_kv=bkv, interpret=interpret),
-            q, kb, vb, tables, lengths, iters=iters, warmup=warmup,
-            jit=False)
-        trials.append(Trial((bs, bkv), t))
+            q, kb, vb, tables, lengths, iters=iters, warmup=warmup)
+        trials.append(Trial((bs, bkv), t, std))
         if bs not in best_at_size or t < best_at_size[bs][1]:
-            best_at_size[bs] = (bkv, t, nb)
+            best_at_size[bs] = (bkv, t, nb, std)
         if verbose:
             print(f"  paged_bt b{batch} rows{num_rows} s{s_max} kv{kv_heads} "
                   f"d{head_dim} block_size={bs} block_kv={bkv}: {t:.1f} us")
     # per-pool-shape entries: the kernel-level tuned lookup
-    for bs, (bkv, t, nb) in best_at_size.items():
+    for bs, (bkv, t, nb, std) in best_at_size.items():
         cache.put(TunedConfig(
             op="paged_decode_blocktable",
             shape=(batch, nb, bs, kv_heads, heads, head_dim),
             dtype=_dtype_name(dtype), hw_name=hw.name,
             blocks={"block_kv": bkv}, time_us=t, baseline_us=0.0,
-            candidates_tried=sum(1 for tr in trials if tr.blocks[0] == bs)))
+            candidates_tried=sum(1 for tr in trials if tr.blocks[0] == bs),
+            time_us_std=std))
     best = min(trials, key=lambda t: t.time_us)
     # baseline for the speedup quote: the coarsest paging granule tried
     # (one block = whole sequence, i.e. the slot-pool layout)
@@ -290,7 +311,7 @@ def autotune_paged_decode_blocktable(batch: int, num_rows: int, s_max: int,
         dtype=_dtype_name(dtype), hw_name=hw.name,
         blocks={"block_size": best.blocks[0], "block_kv": best.blocks[1]},
         time_us=best.time_us, baseline_us=baseline_us,
-        candidates_tried=len(trials))
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
     cache.put(cfg)
     return cfg
 
@@ -323,12 +344,13 @@ def autotune_flash_attention(batch: int, seq: int, heads: int, head_dim: int,
     trials: List[Trial] = []
     baseline_us = 0.0
     for bq, bkv in cands:
-        t = wall_us(
+        t, std = _measure(
+            flash_op_name(causal),
             lambda q, k, v, bq=bq, bkv=bkv: flash_attention(
                 q, k, v, causal=causal, block_q=bq, block_kv=bkv,
                 interpret=interpret),
-            q, k, v, iters=iters, warmup=warmup, jit=False)
-        trials.append(Trial((bq, bkv), t))
+            q, k, v, iters=iters, warmup=warmup)
+        trials.append(Trial((bq, bkv), t, std))
         if (bq, bkv) == DEFAULT_FLASH_BLOCKS:
             baseline_us = t
         if verbose:
@@ -341,7 +363,7 @@ def autotune_flash_attention(batch: int, seq: int, heads: int, head_dim: int,
         dtype=_dtype_name(dtype), hw_name=hw.name,
         blocks={"block_q": best.blocks[0], "block_kv": best.blocks[1]},
         time_us=best.time_us, baseline_us=baseline_us,
-        candidates_tried=len(trials))
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
     cache.put(cfg)
     return cfg
 
@@ -389,8 +411,9 @@ def autotune_flash_backward(batch: int, seq: int, heads: int, head_dim: int,
                     q, k, v, causal=causal, bwd_block_q=bq, bwd_block_kv=bkv,
                     interpret=interpret).sum().astype(jnp.float32),
                 argnums=(0, 1, 2))(q, k, v)
-        t = wall_us(vjp, q, k, v, iters=iters, warmup=warmup, jit=True)
-        trials.append(Trial((bq, bkv), t))
+        t, std = _measure(flash_bwd_op_name(causal), vjp, q, k, v,
+                          iters=iters, warmup=warmup, jit=True)
+        trials.append(Trial((bq, bkv), t, std))
         if (bq, bkv) == DEFAULT_FLASH_BLOCKS:
             baseline_us = t
         if verbose:
@@ -403,6 +426,6 @@ def autotune_flash_backward(batch: int, seq: int, heads: int, head_dim: int,
         dtype=_dtype_name(dtype), hw_name=hw.name,
         blocks={"block_q": best.blocks[0], "block_kv": best.blocks[1]},
         time_us=best.time_us, baseline_us=baseline_us,
-        candidates_tried=len(trials))
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
     cache.put(cfg)
     return cfg

@@ -1,0 +1,310 @@
+"""Observability layer: tracer / metrics / watchdog units, and the engine
+integration contract — steady-state serving after calibration performs ZERO
+unexpected recompiles (armed watchdog passes), and an injected out-of-lattice
+shape demonstrably fires it."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.registry import get_smoke_config
+from repro.models import init_lm
+from repro.obs import view
+from repro.obs.trace import NULL_SPAN, Tracer
+from repro.serving.engine import (Completion, Engine, EngineStats,
+                                  synthetic_requests)
+from repro.tuning.cache import TunedConfig
+from repro.tuning.measure import wall_us
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with obs disabled and empty — the rest of
+    the suite must never see leaked spans/metrics."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def smoke_lm():
+    cfg = get_smoke_config("internlm2-1.8b")
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+class TestTracer:
+    def test_disabled_is_shared_noop(self):
+        s = obs.span("anything", rid=1)
+        assert s is NULL_SPAN and s.dur_s == 0.0
+        with s:
+            pass
+        obs.instant("nothing")
+        assert obs.get_tracer().events() == []
+
+    def test_span_nesting_and_chrome_validity(self):
+        obs.enable(annotate_device=False)
+        with obs.span("outer", cat="engine", rid=7):
+            with obs.span("inner", cat="sample"):
+                pass
+        evs = obs.get_tracer().events()
+        by_name = {e["name"]: e for e in evs}
+        inner, outer = by_name["inner"], by_name["outer"]
+        # depth comes from the per-thread span stack; containment from the
+        # shared monotonic clock
+        assert outer["args"]["depth"] == 0 and inner["args"]["depth"] == 1
+        assert inner["ts"] >= outer["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+        assert outer["args"]["rid"] == 7
+
+        chrome = obs.get_tracer().to_chrome()
+        # valid Chrome trace-event JSON: metadata header + X events with
+        # ts/dur/pid/tid, JSON-round-trippable, displayTimeUnit present
+        assert chrome["displayTimeUnit"] == "ms"
+        assert chrome["traceEvents"][0]["ph"] == "M"
+        for e in chrome["traceEvents"][1:]:
+            assert e["ph"] in ("X", "i")
+            assert e["ts"] >= 0 and "pid" in e and "tid" in e
+            if e["ph"] == "X":
+                assert e["dur"] >= 0
+        assert json.loads(json.dumps(chrome)) == chrome
+
+    def test_instant_and_bounded_buffer(self):
+        tr = Tracer(capacity=4, annotate_device=False)
+        for i in range(6):
+            tr.instant("tick", i=i)
+        evs = tr.events()
+        assert len(evs) == 4 and tr.dropped == 2
+        assert all(e["ph"] == "i" and e["s"] == "t" for e in evs)
+        assert evs[0]["args"]["i"] == 2  # oldest two fell off
+
+    def test_save_is_loadable(self, tmp_path):
+        obs.enable(annotate_device=False)
+        with obs.span("step"):
+            pass
+        path = tmp_path / "trace.json"
+        obs.get_tracer().save(str(path))
+        trace = json.loads(path.read_text())
+        assert any(e["ph"] == "X" and e["name"] == "step"
+                   for e in trace["traceEvents"])
+
+
+class TestMetrics:
+    def test_instruments(self):
+        obs.counter("t.count").inc()
+        obs.counter("t.count").inc(2)
+        obs.gauge("t.depth").set(5)
+        h = obs.histogram("t.lat")
+        h.observe_many([1.0, 2.0, 3.0, 4.0])
+        snap = obs.get_metrics().snapshot()
+        assert snap["counters"]["t.count"] == 3
+        assert snap["gauges"]["t.depth"] == 5.0
+        s = snap["histograms"]["t.lat"]
+        assert s["count"] == 4 and s["sum"] == 10.0 and s["min"] == 1.0
+        assert s["p50"] == pytest.approx(2.5)
+        json.dumps(snap)  # snapshot must be JSON-serializable as-is
+
+    def test_prometheus_text(self):
+        obs.counter("engine.tokens_generated").inc(42)
+        obs.gauge("engine.queue_depth").set(3)
+        obs.histogram("engine.decode_step_s").observe(0.25)
+        text = obs.get_metrics().to_prometheus()
+        assert "# TYPE engine_tokens_generated counter" in text
+        assert "engine_tokens_generated 42" in text
+        assert "# TYPE engine_queue_depth gauge" in text
+        assert 'engine_decode_step_s{quantile="0.5"} 0.25' in text
+        assert "engine_decode_step_s_count 1" in text
+
+
+class TestCompileWatch:
+    def test_records_arming_and_mirror(self):
+        obs.enable(annotate_device=False)
+
+        def watched(x):
+            return x * 2.0 + 1.0
+
+        f = jax.jit(watched)
+        with obs.CompileWatch() as watch:
+            jax.block_until_ready(f(jnp.ones((4,), jnp.float32)))
+            recs = [r for r in watch.records if "watched" in r.name]
+            assert recs and recs[0].wall_s > 0 and not recs[0].armed
+            n = len(watch.records)
+            # jit cache hit: same shape must not record a compile
+            jax.block_until_ready(f(jnp.ones((4,), jnp.float32)))
+            assert len(watch.records) == n
+            watch.check()  # not armed -> never raises
+
+            watch.arm()
+            with pytest.raises(obs.UnexpectedCompile):
+                f(jnp.ones((5,), jnp.float32))
+            assert watch.violations and watch.violations[-1].armed
+            with pytest.raises(obs.UnexpectedCompile):
+                watch.check()
+            watch.disarm()
+
+            d = watch.to_json()
+            assert d["records"] and d["violations"]
+            assert d["backend_compiles"] >= 1
+        # mirrored into the metrics registry while obs was enabled
+        snap = obs.get_metrics().snapshot()
+        assert snap["counters"]["compile.count"] >= 2
+        assert snap["counters"]["compile.violations"] >= 1
+
+
+class TestDrift:
+    def test_report_normalizes_by_median_ratio(self):
+        mon = obs.DriftMonitor(hw_name="test_hw")
+        mon.add_site("a", 0.001)
+        mon.add_site("b", 0.001)
+        for _ in range(3):
+            mon.observe("a", 0.002)  # ratio 2.0
+        mon.observe("b", 0.001)      # ratio 1.0
+        rows = {r["site"]: r for r in mon.report()}
+        assert rows["a"]["ratio"] == pytest.approx(2.0)
+        assert rows["b"]["ratio"] == pytest.approx(1.0)
+        med = 1.5  # median of [2.0, 1.0]
+        assert rows["a"]["rel_drift"] == pytest.approx(2.0 / med)
+        assert rows["b"]["rel_drift"] == pytest.approx(1.0 / med)
+
+    def test_unknown_site_and_empty_sites(self, tmp_path):
+        mon = obs.DriftMonitor()
+        mon.add_site("never_observed", 0.5)
+        mon.observe("surprise", 0.1)  # auto-created, predicted 0
+        rows = mon.report()
+        assert [r["site"] for r in rows] == ["surprise"]
+        assert rows[0]["ratio"] is None and rows[0]["rel_drift"] is None
+        mon.save(str(tmp_path / "drift.json"))
+        d = json.loads((tmp_path / "drift.json").read_text())
+        assert d["rows"][0]["site"] == "surprise"
+
+
+class TestEngineStatsSplits:
+    def _comp(self, rid, cached):
+        return Completion(rid=rid, prompt_len=8, tokens=[1, 2],
+                          arrival_s=0.0, first_token_s=0.1, done_s=0.2,
+                          itl_s=[0.05], cached_tokens=cached)
+
+    def test_all_cold(self):
+        st = EngineStats.collect([self._comp(0, 0), self._comp(1, 0)], 1.0)
+        assert st.ttft_hit_p50_s is None
+        assert st.ttft_cold_p50_s == pytest.approx(0.1)
+
+    def test_all_hit(self):
+        st = EngineStats.collect([self._comp(0, 4)], 1.0)
+        assert st.ttft_cold_p50_s is None
+        assert st.ttft_hit_p50_s == pytest.approx(0.1)
+        assert st.cache_hit_requests == 1
+
+    def test_empty_run(self):
+        st = EngineStats.collect([], 0.0)
+        assert st.tok_s == 0.0
+        assert st.ttft_hit_p50_s is None and st.ttft_cold_p50_s is None
+        json.dumps(st.to_json())
+
+
+class TestMeasureSamples:
+    def test_return_samples(self):
+        def f(x):
+            return x + 1.0
+
+        x = jnp.ones((8,), jnp.float32)
+        mean, samples = wall_us(f, x, iters=3, warmup=1, return_samples=True)
+        assert len(samples) == 3 and all(s > 0 for s in samples)
+        assert mean == pytest.approx(sum(samples) / 3)
+        # default path unchanged: a bare float
+        assert isinstance(wall_us(f, x, iters=2, warmup=1), float)
+
+    def test_tuned_config_std_roundtrip(self):
+        cfg = TunedConfig(op="matmul", shape=(8, 8, 8), dtype="float32",
+                          hw_name="test", blocks={"block_m": 8},
+                          time_us=10.0, time_us_std=1.5)
+        back = TunedConfig.from_json(cfg.to_json())
+        assert back.time_us_std == 1.5
+        # pre-std cache files load with the 0.0 default
+        old = {k: v for k, v in cfg.to_json().items() if k != "time_us_std"}
+        assert TunedConfig.from_json(old).time_us_std == 0.0
+
+
+class TestEngineObservability:
+    """The acceptance contract, end to end on the smoke model: calibrate ->
+    arm -> serve with zero unexpected recompiles, spans/metrics/drift line up
+    with the engine's own counters, the dump renders, and an out-of-lattice
+    shape fires the armed watchdog."""
+
+    def test_steady_state_and_armed_fire(self, smoke_lm, tmp_path):
+        cfg, params = smoke_lm
+        eng = Engine(params, cfg, max_batch=2, max_prompt=16, max_new=8)
+        watch = obs.CompileWatch().install()
+        try:
+            eng.calibrate_step_s()  # warms every (bucket, decode) program
+            warm = len(watch.records)
+            assert warm >= eng.policy.num_programs  # prefills + decode (+aux)
+
+            obs.enable(annotate_device=False)
+            obs.reset()  # counters below are per-run, not per-process
+            watch.arm()
+            reqs = synthetic_requests(4, pattern="burst", min_prompt=4,
+                                      max_prompt=16, min_new=2, max_new=8,
+                                      vocab=cfg.vocab_size, seed=3)
+            done, stats = eng.run(reqs)
+            watch.check()  # ZERO unexpected recompiles in steady state
+            assert len(watch.records) == warm and not watch.violations
+            watch.disarm()
+
+            # spans mirror the engine's own counters one-to-one
+            evs = obs.get_tracer().events()
+            spans = [e for e in evs if e["ph"] == "X"]
+            by = lambda n: [e for e in spans if e["name"] == n]
+            assert len(by("decode_step")) == stats.decode_steps > 0
+            assert len(by("prefill")) == stats.prefills == len(done)
+            assert len(by("admit")) == stats.prefills
+            # every sample span nests inside an admit or decode_step interval
+            parents = by("decode_step") + by("admit")
+            for s in by("sample"):
+                assert s["args"]["depth"] >= 1
+                assert any(p["ts"] <= s["ts"] and
+                           s["ts"] + s["dur"] <= p["ts"] + p["dur"]
+                           for p in parents)
+
+            snap = obs.get_metrics().snapshot()
+            assert snap["counters"]["engine.tokens_generated"] == \
+                stats.total_generated == sum(len(c.tokens) for c in done)
+            assert snap["counters"]["engine.decode_steps"] == stats.decode_steps
+            assert snap["counters"]["engine.requests_completed"] == len(done)
+            assert snap["histograms"]["engine.decode_step_s"]["count"] == \
+                stats.decode_steps
+
+            # drift accumulated one observation per decode step
+            rows = {r["site"]: r for r in eng.drift.report()}
+            assert rows["decode_step"]["count"] == stats.decode_steps
+            assert any(s.startswith("prefill_") for s in rows)
+
+            # the dump round-trips through export_all and the view CLI
+            dump = str(tmp_path / "dump")
+            paths = obs.export_all(dump, drift=eng.drift, watch=watch)
+            assert sorted(paths) == ["compiles", "drift", "metrics",
+                                     "prometheus", "trace"]
+            trace = json.loads(open(paths["trace"]).read())
+            assert any(e["ph"] == "X" and e["name"] == "decode_step"
+                       for e in trace["traceEvents"])
+            lines = view.render_summary(dump)
+            text = "\n".join(lines)
+            assert "decode_step" in text and "Compiles" in text
+            assert view.main([dump]) == 0
+
+            # inject an out-of-lattice shape: the armed watchdog must fire
+            # from inside the offending jit call
+            watch.arm()
+            bucket = eng.policy.prompt_buckets[0]
+            bad = np.zeros((1, bucket + 3), np.int32)  # width off the lattice
+            with pytest.raises(obs.UnexpectedCompile):
+                eng._prefills[bucket](params, jnp.asarray(bad),
+                                      jnp.asarray(1, jnp.int32))
+            assert watch.violations
+            watch.disarm()
+        finally:
+            watch.uninstall()

@@ -1,0 +1,31 @@
+"""repro.analysis — the codesign lint engine.
+
+Static checks that turn the paper's co-design guidelines and this repo's
+kernel/obs contracts into a CI gate:
+
+  * **shape audit** (SHP1xx): every registered config's vocab / head_dim /
+    d_ff / expert / SSM shapes against the target hardware's tile geometry,
+    violations priced through the analytic GEMM model;
+  * **kernel contract** (KRN1xx): AST checks over the Pallas kernels —
+    f32 accumulators, BlockSpec index-map arity vs grid rank, and the
+    cross-module tuned-op contract (ops lookup <-> autotuner <-> candidates
+    lattice <-> VMEM budget);
+  * **jit hygiene** (JIT2xx): obs instrumentation, host RNG/clocks, mutable
+    defaults and mutated-global capture inside traced code.
+
+Run it:  ``python -m repro.analysis src/ --fail-on error``
+Suppress: ``# repro: noqa[RULE]`` on the offending line.
+Catalog:  ``python -m repro.analysis --list-rules`` or
+          docs/static-analysis-guide.md.
+"""
+from .engine import AnalysisResult, analyze
+from .findings import (Finding, count_by_severity, severity_at_least,
+                       sort_findings, worst_severity)
+from .rules import RULES, Rule, get_rule
+from .shape_audit import audit_config, audit_registry
+
+__all__ = [
+    "analyze", "AnalysisResult", "Finding", "RULES", "Rule", "get_rule",
+    "audit_config", "audit_registry", "sort_findings", "count_by_severity",
+    "severity_at_least", "worst_severity",
+]

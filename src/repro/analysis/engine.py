@@ -1,0 +1,75 @@
+"""Orchestrator: run every pass over a file set, apply suppressions.
+
+`analyze()` is the one entry point the CLI, the tests, and `benchmarks/
+report.py --analysis` share.  Pass order:
+
+  1. engine checks (ANA001 parse errors, ANA002 bad pragmas) per file;
+  2. per-file AST passes — kernel contract (KRN101-103) and jit hygiene
+     (JIT2xx);
+  3. the cross-module tuned-op contract (KRN104-107) over the whole set;
+  4. the registry shape audit (SHP1xx), unless disabled — it is keyed on
+     the config *registry*, not the scanned paths, so it runs whenever the
+     repo's configs are importable.
+
+Per-line `# repro: noqa[...]` pragmas are applied to AST-pass findings here
+(the shape audit applies its own, since its findings are anchored across
+files it did not scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Set
+
+from . import jit_hygiene, kernel_contract
+from .findings import Finding, sort_findings
+from .source import SourceFile, engine_findings, iter_python_files, \
+    load_source
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: List[Finding]
+    files_scanned: int
+
+    def with_rules(self, rule_ids: Set[str]) -> "AnalysisResult":
+        return AnalysisResult(
+            [f for f in self.findings if f.rule_id in rule_ids],
+            self.files_scanned)
+
+
+def _suppressed(sf: SourceFile, f: Finding) -> bool:
+    return sf.suppressions.is_suppressed(f.line, f.rule_id)
+
+
+def analyze(paths: Sequence[str], registry_audit: bool = True,
+            hw_name: str = "tpu_v5e", tp: int = 1,
+            include_smoke: bool = True,
+            rules: Optional[Set[str]] = None) -> AnalysisResult:
+    files = [load_source(p) for p in iter_python_files(list(paths))]
+    findings: List[Finding] = []
+
+    for sf in files:
+        findings.extend(engine_findings(sf))
+        if sf.tree is None:
+            continue
+        for f in kernel_contract.check_file(sf) + jit_hygiene.check_file(sf):
+            if not _suppressed(sf, f):
+                findings.append(f)
+
+    by_path = {sf.path: sf for sf in files}
+    for f in kernel_contract.check_tuned_contract(files):
+        sf = by_path.get(f.file)
+        if sf is None or not _suppressed(sf, f):
+            findings.append(f)
+
+    if registry_audit:
+        from .shape_audit import audit_registry
+        try:
+            findings.extend(audit_registry(hw_name=hw_name, tp=tp,
+                                           include_smoke=include_smoke))
+        except ImportError:
+            pass  # scanning a tree without the repo's configs on path
+
+    if rules is not None:
+        findings = [f for f in findings if f.rule_id in rules]
+    return AnalysisResult(sort_findings(findings), len(files))

@@ -1,0 +1,334 @@
+"""jit / obs hygiene (JIT rules) — keep traced programs pure.
+
+The obs layer's contract (PR 6) is that instrumentation lives *outside*
+jitted code: a span or counter inside a traced function fires once at trace
+time, silently records nothing afterwards, and — worse — makes the trace
+look instrumented when it is not.  Host-side RNG and clocks inside a traced
+function freeze to trace-time constants.  This pass finds those hazards
+statically.
+
+Scope: functions *reachable from a jit root within the same module* —
+
+  * ``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` decorated defs,
+  * defs passed to ``jax.jit(f)`` (the engine's ``return jax.jit(prefill)``
+    factory pattern),
+  * Pallas kernel bodies (first arg of ``pl.pallas_call``, including
+    ``functools.partial(kernel, ...)``),
+  * ``jax.custom_vjp`` functions and their ``defvjp`` fwd/bwd pair,
+  * ``lax.scan`` / ``cond`` / ``while_loop`` / ``fori_loop`` bodies,
+
+plus anything those call locally.  Cross-module reachability is deliberately
+out of scope: trace-time dispatch recording in ops.py wrappers (outside the
+inner jitted fns) is by-design "once per lowered program" and must not be
+flagged.
+
+Rules:
+
+  * JIT201 — obs call (span/counter/record_dispatch/...) inside traced
+    code.  ``jax.named_scope`` is the sanctioned alternative (trace-time
+    HLO metadata, no runtime host effect).
+  * JIT202 — host RNG / clock (`time.*`, `random.*`, `np.random.*`,
+    `datetime.*`) inside traced code: freezes to a trace-time constant.
+  * JIT203 — mutable default argument on a traced function: shared across
+    every trace, a classic cache-poisoning footgun.
+  * JIT204 — traced code reads a module-level mutable (list/dict/set)
+    binding: captured by value at trace time; later mutation never
+    re-traces.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .findings import Finding
+from .source import SourceFile
+
+_OBS_CALLS = {"span", "instant", "counter", "gauge", "histogram",
+              "record_dispatch", "enable", "disable", "export_all"}
+_JIT_NAMES = {"jit"}  # matched as last attr of jax.jit / jax.jit alias
+_CONTROL_FLOW_BODIES = {"scan", "cond", "while_loop", "fori_loop",
+                        "switch", "checkpoint", "remat"}
+_HOST_EFFECT_ROOTS = {"time", "random", "datetime"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_name(call: ast.Call) -> str:
+    return _dotted(call.func) or ""
+
+
+def _last(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+def _is_jit_expr(node: ast.expr) -> bool:
+    """jax.jit, or functools.partial(jax.jit, ...)."""
+    d = _dotted(node)
+    if d is not None and _last(d) in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        cn = _call_name(node)
+        if _last(cn) == "partial" and node.args:
+            return _is_jit_expr(node.args[0])
+        if _last(cn) in _JIT_NAMES:
+            return True
+    return False
+
+
+def _fn_names_in(expr: ast.expr) -> List[str]:
+    """Local function names referenced by a callable-ish argument."""
+    if isinstance(expr, ast.Name):
+        return [expr.id]
+    if isinstance(expr, ast.Call):
+        cn = _call_name(expr)
+        if _last(cn) == "partial" and expr.args:
+            return _fn_names_in(expr.args[0])
+    return []
+
+
+def _collect_defs(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, node)
+    return defs
+
+
+def _collect_roots(sf: SourceFile,
+                   defs: Dict[str, ast.FunctionDef]) -> Set[str]:
+    roots: Set[str] = set()
+    tree = sf.tree
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _is_jit_expr(dec):
+                    roots.add(node.name)
+                d = _dotted(dec) or (_call_name(dec)
+                                     if isinstance(dec, ast.Call) else "")
+                if d and _last(d) == "custom_vjp":
+                    roots.add(node.name)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        tail = _last(name)
+        # jax.jit(fn) — the engine _make_* factory pattern
+        if tail in _JIT_NAMES and node.args:
+            for fn in _fn_names_in(node.args[0]):
+                if fn in defs:
+                    roots.add(fn)
+        # pl.pallas_call(kernel, ...) / pallas_call(kernel=...)
+        if tail == "pallas_call":
+            kernel = node.args[0] if node.args else None
+            if kernel is None:
+                for k in node.keywords:
+                    if k.arg == "kernel":
+                        kernel = k.value
+            if kernel is not None:
+                for fn in _fn_names_in(kernel):
+                    if fn in defs:
+                        roots.add(fn)
+        # jax.custom_vjp(f), f.defvjp(fwd, bwd)
+        if tail in ("custom_vjp", "defvjp"):
+            for arg in node.args:
+                for fn in _fn_names_in(arg):
+                    if fn in defs:
+                        roots.add(fn)
+        # lax.scan(body, ...) and friends — bodies trace
+        if tail in _CONTROL_FLOW_BODIES and name.split(".")[0] in (
+                "lax", "jax"):
+            for arg in node.args:
+                for fn in _fn_names_in(arg):
+                    if fn in defs:
+                        roots.add(fn)
+    return roots
+
+
+def _reachable(roots: Set[str],
+               defs: Dict[str, ast.FunctionDef]) -> Set[str]:
+    seen: Set[str] = set()
+    work = [r for r in roots if r in defs]
+    while work:
+        name = work.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        fn = defs[name]
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = _last(_call_name(node))
+                if callee in defs and callee not in seen:
+                    work.append(callee)
+    return seen
+
+
+def _module_mutables(tree: ast.AST) -> Dict[str, int]:
+    """Module-level names bound to mutable list/dict/set values that the
+    module also *mutates* somewhere (a frozen-in-practice constant dict is a
+    legitimate trace-time capture; one that code appends to is not)."""
+    bound: Dict[str, int] = {}
+    for node in getattr(tree, "body", []):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        else:
+            continue
+        mutable = isinstance(value, (ast.List, ast.Dict, ast.Set,
+                                     ast.ListComp, ast.DictComp,
+                                     ast.SetComp))
+        if isinstance(value, ast.Call) and _last(
+                _call_name(value)) in ("list", "dict", "set",
+                                       "defaultdict", "deque"):
+            mutable = True
+        if not mutable:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                bound[t.id] = node.lineno
+
+    mutated: Set[str] = set()
+    _MUTATORS = {"append", "extend", "add", "update", "pop", "popitem",
+                 "setdefault", "clear", "insert", "remove", "discard"}
+    for node in ast.walk(tree):
+        # d[k] = v / del d[k] / d[k] += v
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+            targets = (node.targets if isinstance(node, (ast.Assign,
+                                                         ast.Delete))
+                       else [node.target])
+            for t in targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)):
+                    mutated.add(t.value.id)
+        # d.update(...) etc.
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _MUTATORS
+                and isinstance(node.func.value, ast.Name)):
+            mutated.add(node.func.value.id)
+        # global d; d = ...
+        if isinstance(node, ast.Global):
+            mutated.update(node.names)
+    return {n: ln for n, ln in bound.items() if n in mutated}
+
+
+def _mutable_defaults(fn: ast.FunctionDef) -> List[ast.expr]:
+    out = []
+    for d in list(fn.args.defaults) + [d for d in fn.args.kw_defaults
+                                       if d is not None]:
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            out.append(d)
+        elif isinstance(d, ast.Call) and _last(
+                _call_name(d)) in ("list", "dict", "set"):
+            out.append(d)
+    return out
+
+
+def _local_bindings(fn: ast.FunctionDef) -> Set[str]:
+    bound = {a.arg for a in (fn.args.args + fn.args.kwonlyargs
+                             + fn.args.posonlyargs)}
+    if fn.args.vararg:
+        bound.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        bound.add(fn.args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                     (ast.Store,
+                                                      ast.Del)):
+            bound.add(node.id)
+        elif isinstance(node, ast.FunctionDef) and node is not fn:
+            bound.add(node.name)
+    return bound
+
+
+def check_file(sf: SourceFile) -> List[Finding]:
+    if sf.tree is None:
+        return []
+    defs = _collect_defs(sf.tree)
+    roots = _collect_roots(sf, defs)
+    if not roots:
+        return []
+    traced = _reachable(roots, defs)
+    mutables = _module_mutables(sf.tree)
+    out: List[Finding] = []
+
+    for name in sorted(traced):
+        fn = defs[name]
+
+        # JIT203: mutable defaults on the traced def itself
+        for d in _mutable_defaults(fn):
+            out.append(Finding(
+                sf.path, d.lineno, "JIT203", "error",
+                f"traced function {name!r} has a mutable default "
+                f"argument; it is shared across every trace",
+                fix_hint="default to None and construct inside, or make "
+                         "it a static tuple"))
+
+        local = _local_bindings(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = _call_name(node)
+            if not cname:
+                continue
+            head, tail = cname.split(".")[0], _last(cname)
+
+            # JIT201: obs instrumentation inside traced code
+            if head == "obs" and tail in _OBS_CALLS:
+                out.append(Finding(
+                    sf.path, node.lineno, "JIT201", "error",
+                    f"obs.{tail}() inside traced function {name!r}: fires "
+                    f"once at trace time, then records nothing",
+                    fix_hint="hoist to the un-jitted wrapper; use "
+                             "jax.named_scope for in-trace HLO labels"))
+
+            # JIT202: host RNG / clocks inside traced code
+            host = (head in _HOST_EFFECT_ROOTS and head not in local) or \
+                cname.startswith(("np.random.", "numpy.random."))
+            if host:
+                out.append(Finding(
+                    sf.path, node.lineno, "JIT202", "error",
+                    f"host effect {cname}() inside traced function "
+                    f"{name!r}: freezes to a trace-time constant",
+                    fix_hint="thread a jax.random key / pass timestamps "
+                             "in as arguments"))
+
+        # JIT204: `global` in traced code, and reads of module-level
+        # mutables the module actually mutates (one finding per name)
+        flagged: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Global):
+                out.append(Finding(
+                    sf.path, node.lineno, "JIT204", "error",
+                    f"traced function {name!r} declares "
+                    f"global {', '.join(node.names)}: module state "
+                    f"mutated from traced code runs at trace time only",
+                    fix_hint="return the value and update module state "
+                             "in the un-jitted caller"))
+                continue
+            if (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id in mutables
+                    and node.id not in local
+                    and node.id not in flagged):
+                flagged.add(node.id)
+                out.append(Finding(
+                    sf.path, node.lineno, "JIT204", "error",
+                    f"traced function {name!r} reads module-level mutable "
+                    f"{node.id!r}; captured by value at trace time, later "
+                    f"mutation never re-traces",
+                    fix_hint="pass it as an argument (donated/static as "
+                             "appropriate) or freeze it to a tuple"))
+    return out

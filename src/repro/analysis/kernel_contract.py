@@ -1,0 +1,530 @@
+"""Pallas kernel contract checker (KRN rules) — an AST pass over kernels.
+
+Two layers:
+
+**Per-file checks** (any file that issues a `pl.pallas_call`):
+
+  * KRN101 — VMEM scratch accumulators must be float32 (bf16 accumulation
+    loses mantissa every MXU pass).
+  * KRN102 — every `dot`/`dot_general` in a kernel file must request
+    `preferred_element_type=jnp.float32`.
+  * KRN103 — every `BlockSpec` index map's parameter count must equal the
+    grid rank (plus `num_scalar_prefetch` for `PrefetchScalarGridSpec`
+    contexts — scalar-prefetch refs are prepended to the index-map args).
+
+**Cross-module tuned-op contract** (runs when the analyzed set contains an
+`autotune_*` entry point, i.e. `tuning/search.py` is in scope):
+
+  Every tuning-cache *lookup* (`lookup(op, shape, ...)` in `kernels/*/ops.py`
+  or the serving engine) is matched against the `TunedConfig(op=...,
+  shape=...)` entries the autotuners *write*:
+
+  * KRN104 — a looked-up op that nothing writes (tuned=True silently never
+    hits);
+  * KRN105 — lookup/write shape-key arity mismatch (the key never matches);
+  * KRN106 — an autotune entry point with no `*_candidates` lattice sweep,
+    or a candidates lattice with no `*_vmem_bytes` feasibility model;
+  * KRN107 — a written op that nothing in the analyzed tree consults.
+
+  Op names are resolved statically through constants, conditional
+  expressions, local assignments, and helper functions returning string
+  literals or constant-prefix f-strings (`fused_mlp_{mlp_type}` matches as
+  the prefix pattern ``fused_mlp_*``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+from .source import SourceFile
+
+_LOW_PRECISION_FLOATS = {"bfloat16", "float16", "half"}
+_DOT_FUNCS = {"dot", "dot_general"}
+_LOOKUP_NAMES = {"lookup", "_tuning_lookup"}
+
+
+# -- small AST helpers --------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_name(call: ast.Call) -> str:
+    return _dotted(call.func) or ""
+
+
+def _last_attr(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _is_f32(node: Optional[ast.expr]) -> bool:
+    if node is None:
+        return False
+    d = _dotted(node)
+    return d is not None and _last_attr(d) in ("float32", "f32")
+
+
+def _int_const(node: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _enclosing_function(tree: ast.AST, target: ast.AST) -> Optional[ast.AST]:
+    """Innermost FunctionDef containing `target` (by position)."""
+    best = None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if (node.lineno <= target.lineno
+                    and target.lineno <= max(getattr(node, "end_lineno",
+                                                     node.lineno),
+                                             node.lineno)):
+                if best is None or node.lineno > best.lineno:
+                    best = node
+    return best
+
+
+def _resolve_name_assignment(scope: Optional[ast.AST], name: str,
+                             before_line: int) -> Optional[ast.expr]:
+    """Last `name = <expr>` in `scope` before `before_line`."""
+    if scope is None:
+        return None
+    found = None
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and node.lineno < before_line:
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    found = node.value
+    return found
+
+
+# -- per-file checks ----------------------------------------------------------
+
+
+def _has_pallas_call(tree: ast.AST) -> bool:
+    return any(isinstance(n, ast.Call)
+               and _last_attr(_call_name(n)) == "pallas_call"
+               for n in ast.walk(tree))
+
+
+def _check_vmem_dtypes(sf: SourceFile) -> List[Finding]:
+    out = []
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and _last_attr(_call_name(node)) == "VMEM"):
+            continue
+        dtype = node.args[1] if len(node.args) > 1 else _kw(node, "dtype")
+        d = _dotted(dtype) if dtype is not None else None
+        if d is not None and _last_attr(d) in _LOW_PRECISION_FLOATS:
+            out.append(Finding(
+                sf.path, node.lineno, "KRN101", "error",
+                f"VMEM scratch declared as {_last_attr(d)}; Pallas "
+                f"accumulators must be float32",
+                fix_hint="declare the scratch as jnp.float32 and cast on "
+                         "the final store (o_ref[...] = acc.astype(...))"))
+    return out
+
+
+def _check_dot_accum(sf: SourceFile) -> List[Finding]:
+    out = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if _last_attr(name) not in _DOT_FUNCS:
+            continue
+        root = name.split(".", 1)[0]
+        if root not in ("jnp", "jax", "lax", "pl", "np", "numpy"):
+            continue
+        pet = _kw(node, "preferred_element_type")
+        if pet is None or not _is_f32(pet):
+            what = ("missing" if pet is None
+                    else f"set to {_dotted(pet) or '?'}")
+            out.append(Finding(
+                sf.path, node.lineno, "KRN102", "error",
+                f"{name} in a Pallas kernel file: preferred_element_type "
+                f"{what}; the MXU would accumulate at the input dtype",
+                fix_hint="pass preferred_element_type=jnp.float32"))
+    return out
+
+
+@dataclasses.dataclass
+class _SpecContext:
+    """One pallas_call / PrefetchScalarGridSpec with its grid + specs."""
+
+    call: ast.Call
+    grid_rank: Optional[int]
+    extra_index_args: int  # num_scalar_prefetch
+    specs: List[Tuple[ast.Call, Optional[ast.expr]]]  # (BlockSpec, index_map)
+
+
+def _resolve_blockspec(expr: ast.expr, tree: ast.AST,
+                       scope: Optional[ast.AST]) -> Optional[ast.Call]:
+    """Resolve an in_specs/out_specs element to its pl.BlockSpec(...) call:
+    direct call, a local variable, or a local helper function returning
+    one."""
+    if isinstance(expr, ast.Call):
+        if _last_attr(_call_name(expr)) == "BlockSpec":
+            return expr
+        # helper function returning a BlockSpec (paged.py kv_spec pattern)
+        callee = _call_name(expr)
+        if callee and "." not in callee:
+            for node in ast.walk(scope or tree):
+                if (isinstance(node, ast.FunctionDef)
+                        and node.name == callee):
+                    for sub in ast.walk(node):
+                        if (isinstance(sub, ast.Return)
+                                and isinstance(sub.value, ast.Call)
+                                and _last_attr(_call_name(sub.value))
+                                == "BlockSpec"):
+                            return sub.value
+        return None
+    if isinstance(expr, ast.Name):
+        val = _resolve_name_assignment(scope, expr.id, expr.lineno)
+        if isinstance(val, ast.Call) and _last_attr(
+                _call_name(val)) == "BlockSpec":
+            return val
+    return None
+
+
+def _grid_rank_of(expr: Optional[ast.expr],
+                  scope: Optional[ast.AST]) -> Optional[int]:
+    if expr is None:
+        return None
+    if isinstance(expr, ast.Name):
+        expr = _resolve_name_assignment(scope, expr.id, 10 ** 9)
+        if expr is None:
+            return None
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    if _int_const(expr) is not None:
+        return 1
+    return None
+
+
+def _collect_spec_contexts(sf: SourceFile) -> List[_SpecContext]:
+    out: List[_SpecContext] = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = _last_attr(_call_name(node))
+        if tail not in ("pallas_call", "PrefetchScalarGridSpec"):
+            continue
+        scope = _enclosing_function(sf.tree, node)
+        grid = _kw(node, "grid")
+        extra = 0
+        if tail == "PrefetchScalarGridSpec":
+            extra = _int_const(_kw(node, "num_scalar_prefetch")) or 0
+        rank = _grid_rank_of(grid, scope)
+        specs: List[Tuple[ast.Call, Optional[ast.expr]]] = []
+        spec_exprs: List[ast.expr] = []
+        in_specs = _kw(node, "in_specs")
+        if isinstance(in_specs, (ast.List, ast.Tuple)):
+            spec_exprs.extend(in_specs.elts)
+        out_specs = _kw(node, "out_specs")
+        if isinstance(out_specs, (ast.List, ast.Tuple)):
+            spec_exprs.extend(out_specs.elts)
+        elif out_specs is not None:
+            spec_exprs.append(out_specs)
+        for e in spec_exprs:
+            bs = _resolve_blockspec(e, sf.tree, scope)
+            if bs is None:
+                continue
+            index_map = (bs.args[1] if len(bs.args) > 1
+                         else _kw(bs, "index_map"))
+            specs.append((bs, index_map))
+        if grid is not None or specs:
+            out.append(_SpecContext(node, rank, extra, specs))
+    return out
+
+
+def _lambda_arity(expr: ast.expr, scope: Optional[ast.AST],
+                  tree: ast.AST) -> Optional[int]:
+    """Required-parameter count of an index map (defaults like `g=g` are
+    trace-time captures, not grid indices — excluded)."""
+    if isinstance(expr, ast.Name):
+        val = _resolve_name_assignment(scope, expr.id, expr.lineno)
+        if val is not None:
+            expr = val
+    if isinstance(expr, ast.Lambda):
+        a = expr.args
+        return len(a.args) - len(a.defaults)
+    return None
+
+
+def _check_blockspec_arity(sf: SourceFile) -> List[Finding]:
+    out = []
+    for ctx in _collect_spec_contexts(sf):
+        if ctx.grid_rank is None:
+            continue
+        want = ctx.grid_rank + ctx.extra_index_args
+        for bs, index_map in ctx.specs:
+            if index_map is None:
+                continue
+            scope = _enclosing_function(sf.tree, bs)
+            arity = _lambda_arity(index_map, scope, sf.tree)
+            if arity is None:
+                continue
+            if arity != want:
+                extra = (f" + {ctx.extra_index_args} scalar-prefetch refs"
+                         if ctx.extra_index_args else "")
+                out.append(Finding(
+                    sf.path, bs.lineno, "KRN103", "error",
+                    f"BlockSpec index map takes {arity} args but the grid "
+                    f"rank is {ctx.grid_rank}{extra} (= {want} expected)",
+                    fix_hint="one index-map parameter per grid axis (plus "
+                             "one leading ref per scalar-prefetch operand)"))
+    return out
+
+
+# -- cross-module tuned-op contract -------------------------------------------
+
+
+@dataclasses.dataclass
+class _OpRef:
+    ops: List[str]  # resolved names; trailing '*' = prefix pattern
+    arity: Optional[int]
+    file: str
+    line: int
+    context: str  # enclosing function name
+
+
+def _resolve_op_names(expr: ast.expr, scope: Optional[ast.AST],
+                      def_index: Dict[str, ast.FunctionDef],
+                      depth: int = 0) -> List[str]:
+    if depth > 4 or expr is None:
+        return []
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, str):
+        return [expr.value]
+    if isinstance(expr, ast.IfExp):
+        return (_resolve_op_names(expr.body, scope, def_index, depth + 1)
+                + _resolve_op_names(expr.orelse, scope, def_index,
+                                    depth + 1))
+    if isinstance(expr, ast.JoinedStr):
+        if expr.values and isinstance(expr.values[0], ast.Constant):
+            return [str(expr.values[0].value) + "*"]
+        return ["*"]
+    if isinstance(expr, ast.Name):
+        val = _resolve_name_assignment(scope, expr.id, expr.lineno)
+        if val is not None:
+            return _resolve_op_names(val, scope, def_index, depth + 1)
+        return []
+    if isinstance(expr, ast.Call):
+        callee = _last_attr(_call_name(expr))
+        fn = def_index.get(callee)
+        if fn is None:
+            return []
+        names: List[str] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return) and node.value is not None:
+                names.extend(_resolve_op_names(node.value, fn, def_index,
+                                               depth + 1))
+        return names
+    return []
+
+
+def _tuple_arity(expr: Optional[ast.expr],
+                 scope: Optional[ast.AST]) -> Optional[int]:
+    if expr is None:
+        return None
+    if isinstance(expr, ast.Name):
+        expr = _resolve_name_assignment(scope, expr.id, expr.lineno)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    return None
+
+
+def _op_matches(lookup_op: str, writer_op: str) -> bool:
+    for a, b in ((lookup_op, writer_op), (writer_op, lookup_op)):
+        if a.endswith("*") and b.startswith(a[:-1]):
+            return True
+    return lookup_op == writer_op
+
+
+def _build_def_index(files: Sequence[SourceFile]) -> Dict[str,
+                                                          ast.FunctionDef]:
+    index: Dict[str, ast.FunctionDef] = {}
+    for sf in files:
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.FunctionDef):
+                index.setdefault(node.name, node)
+    return index
+
+
+def _names_referenced(fn: ast.AST) -> set:
+    return {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)} | {
+        _last_attr(_dotted(n)) for n in ast.walk(fn)
+        if isinstance(n, ast.Attribute) and _dotted(n)}
+
+
+def check_tuned_contract(files: Sequence[SourceFile]) -> List[Finding]:
+    """The cross-module contract registry check (KRN104-107)."""
+    parsed = [sf for sf in files if sf.tree is not None]
+    def_index = _build_def_index(parsed)
+    autotune_defs = {n: f for n, f in def_index.items()
+                     if n.startswith("autotune_")}
+    if not autotune_defs:
+        return []  # search module not in scope; nothing to cross-check
+
+    findings: List[Finding] = []
+
+    # writers: TunedConfig(op=..., shape=...) inside the analyzed set
+    writers: List[_OpRef] = []
+    for sf in parsed:
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and _last_attr(_call_name(node)) == "TunedConfig"):
+                continue
+            scope = _enclosing_function(sf.tree, node)
+            ops = _resolve_op_names(_kw(node, "op"), scope, def_index)
+            arity = _tuple_arity(_kw(node, "shape"), scope)
+            if ops:
+                writers.append(_OpRef(ops, arity, sf.path, node.lineno,
+                                      getattr(scope, "name", "<module>")))
+
+    # lookups: lookup/_tuning_lookup(op, shape, dtype, hw)
+    lookups: List[_OpRef] = []
+    for sf in parsed:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _last_attr(_call_name(node)) not in _LOOKUP_NAMES:
+                continue
+            if len(node.args) < 2:
+                continue
+            scope = _enclosing_function(sf.tree, node)
+            ops = _resolve_op_names(node.args[0], scope, def_index)
+            arity = _tuple_arity(node.args[1], scope)
+            if ops:
+                lookups.append(_OpRef(ops, arity, sf.path, node.lineno,
+                                      getattr(scope, "name", "<module>")))
+
+    # KRN104/KRN105: every lookup must have a writer at the same arity
+    for ref in lookups:
+        for op in ref.ops:
+            matches = [w for w in writers
+                       if any(_op_matches(op, wop) for wop in w.ops)]
+            if not matches:
+                findings.append(Finding(
+                    ref.file, ref.line, "KRN104", "error",
+                    f"tuning-cache lookup for op {op!r} "
+                    f"(in {ref.context}) has no autotune entry point "
+                    f"writing it — tuned=True can never hit",
+                    fix_hint="add an autotune_* entry in tuning/search.py "
+                             "persisting TunedConfig(op=...) for this op"))
+                continue
+            if ref.arity is not None and not any(
+                    w.arity == ref.arity for w in matches
+                    if w.arity is not None):
+                warities = sorted({w.arity for w in matches
+                                   if w.arity is not None})
+                findings.append(Finding(
+                    ref.file, ref.line, "KRN105", "error",
+                    f"lookup key for op {op!r} has {ref.arity} shape "
+                    f"elements but the autotuner persists "
+                    f"{warities or '?'} — the key never matches and "
+                    f"tuned=True silently falls back",
+                    fix_hint="make the ops.py lookup tuple and the "
+                             "TunedConfig shape tuple the same arity"))
+
+    # KRN107: writers nothing consults
+    for w in writers:
+        for op in w.ops:
+            if not any(_op_matches(lop, op)
+                       for ref in lookups for lop in ref.ops):
+                findings.append(Finding(
+                    w.file, w.line, "KRN107", "warn",
+                    f"autotuner persists op {op!r} (in {w.context}) but "
+                    f"nothing in the analyzed tree looks it up",
+                    fix_hint="consult it via tuned=True, or drop the "
+                             "entry"))
+
+    # KRN106: every autotune entry sweeps a candidates lattice with a VMEM
+    # feasibility model
+    vmem_helpers = {n for n in def_index if n.endswith("_vmem_bytes")}
+
+    def refs_vmem(fn: ast.AST, depth: int = 0) -> bool:
+        names = _names_referenced(fn)
+        if names & vmem_helpers:
+            return True
+        if depth >= 2:
+            return False
+        return any(refs_vmem(def_index[n], depth + 1) for n in names
+                   if n in def_index and n not in vmem_helpers
+                   and not n.startswith("autotune_"))
+
+    for name, fn in autotune_defs.items():
+        sf_path, line = _def_location(parsed, fn)
+        cand_names = sorted(n for n in _names_referenced(fn)
+                            if n.endswith("_candidates"))
+        writes = any(isinstance(n, ast.Call)
+                     and _last_attr(_call_name(n)) == "TunedConfig"
+                     for n in ast.walk(fn))
+        if not writes:
+            continue
+        if not cand_names:
+            findings.append(Finding(
+                sf_path, line, "KRN106", "error",
+                f"{name} persists tuned entries without sweeping a "
+                f"*_candidates lattice — block shapes would bypass the "
+                f"tile-alignment/VMEM feasibility model",
+                fix_hint="enumerate candidates via tuning/candidates.py "
+                         "and measure each"))
+            continue
+        for cn in cand_names:
+            cfn = def_index.get(cn)
+            if cfn is not None and not refs_vmem(cfn):
+                findings.append(Finding(
+                    sf_path, line, "KRN106", "error",
+                    f"{name}: candidates lattice {cn} has no "
+                    f"*_vmem_bytes feasibility model — candidates could "
+                    f"exceed on-chip memory",
+                    fix_hint=f"bound {cn} by a VMEM working-set helper "
+                             f"(see tuning/candidates.py)"))
+    return findings
+
+
+def _def_location(files: Sequence[SourceFile],
+                  fn: ast.FunctionDef) -> Tuple[str, int]:
+    for sf in files:
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if node is fn:
+                return sf.path, fn.lineno
+    return "<unknown>", fn.lineno
+
+
+# -- entry point --------------------------------------------------------------
+
+
+def check_file(sf: SourceFile) -> List[Finding]:
+    """Per-file KRN checks; only files that issue a pallas_call are kernel
+    files (ops.py wrappers and jnp ref oracles are exempt by construction)."""
+    if sf.tree is None or not _has_pallas_call(sf.tree):
+        return []
+    out: List[Finding] = []
+    out.extend(_check_vmem_dtypes(sf))
+    out.extend(_check_dot_accum(sf))
+    out.extend(_check_blockspec_arity(sf))
+    return out

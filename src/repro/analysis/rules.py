@@ -1,0 +1,146 @@
+"""Rule registry: every check the lint engine can raise, with a stable ID.
+
+Rule IDs are grouped by pass:
+
+  * ``SHP1xx`` — shape-efficiency audit over the config registry
+    (`analysis.shape_audit`): the paper's §VI-B guidelines as checks, priced
+    through `core.gemm_model`.
+  * ``KRN1xx`` — Pallas kernel contract (`analysis.kernel_contract`): AST
+    checks over `kernels/*` plus the cross-module tuned-op contract against
+    `tuning/candidates.py` and `tuning/search.py`.
+  * ``JIT2xx`` — jit/obs hygiene (`analysis.jit_hygiene`): host-side effects
+    inside `jax.jit`/`pl.pallas_call`-reachable functions.
+  * ``ANA0xx`` — the engine itself (unparseable file, unknown rule in a
+    pragma).
+
+`docs/static-analysis-guide.md` is the human-facing catalog; this module is
+the machine-facing one (``python -m repro.analysis --list-rules`` prints it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    name: str
+    default_severity: str  # info | warn | error
+    pass_name: str  # shape | kernel | jit | engine
+    doc: str
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(rule_id: str, name: str, default_severity: str, pass_name: str,
+             doc: str) -> Rule:
+    if rule_id in RULES:
+        raise ValueError(f"duplicate rule id {rule_id}")
+    r = Rule(rule_id, name, default_severity, pass_name, doc)
+    RULES[rule_id] = r
+    return r
+
+
+def get_rule(rule_id: str) -> Rule:
+    return RULES[rule_id]
+
+
+# -- engine ------------------------------------------------------------------
+ANA001 = register(
+    "ANA001", "syntax-error", "error", "engine",
+    "File does not parse; no other checks can run on it.")
+ANA002 = register(
+    "ANA002", "unknown-rule-in-pragma", "warn", "engine",
+    "A `# repro: noqa[...]` pragma names a rule ID that does not exist "
+    "(typo'd suppressions silently stop suppressing).")
+
+# -- shape audit -------------------------------------------------------------
+SHP101 = register(
+    "SHP101", "vocab-alignment", "error", "shape",
+    "vocab_size is not a multiple of the hardware lane width (paper §VI-B "
+    "'vocab divisible by 64'; 128 on TPU lanes).  The embedding/lm_head GEMM "
+    "pads every pass; the fix hint prices padding the declared vocab.")
+SHP102 = register(
+    "SHP102", "head-dim-alignment", "error", "shape",
+    "d_model/num_heads leaves a head_dim whose largest power-of-two factor "
+    "is below the lane width — attention BMMs run at reduced MXU utilization "
+    "(paper Fig. 1 GPT-3 2.7B case study).")
+SHP103 = register(
+    "SHP103", "dff-alignment", "error", "shape",
+    "d_ff is not lane-aligned (tile quantization pads every MLP GEMM pass; "
+    "paper §VII-B d_ff re-search).")
+SHP104 = register(
+    "SHP104", "expert-dff-alignment", "error", "shape",
+    "MoE expert d_ff (moe_d_ff) is not lane-aligned; every expert GEMM pads.")
+SHP105 = register(
+    "SHP105", "ssm-alignment", "error", "shape",
+    "SSM state or chunk size is not lane-aligned; the SSD chunk BMMs pad "
+    "(TPU adaptation of the paper's BMM alignment rules).")
+SHP106 = register(
+    "SHP106", "wave-quantization", "warn", "shape",
+    "On wave-scheduled hardware (GPUs), the MLP/lm_head output tile count "
+    "leaves a mostly-empty tail wave over the SMs (paper §VI-B wave "
+    "quantization).  Only raised for hardware with concurrent_tiles.")
+
+# -- kernel contract ---------------------------------------------------------
+KRN101 = register(
+    "KRN101", "non-f32-accumulator", "error", "kernel",
+    "A Pallas VMEM scratch accumulator is declared at a low-precision float "
+    "dtype.  Accumulators must be float32: bf16 accumulation loses ~8 bits "
+    "of mantissa per MXU pass.")
+KRN102 = register(
+    "KRN102", "dot-missing-f32-accum", "error", "kernel",
+    "A dot/dot_general inside a Pallas kernel body does not request "
+    "preferred_element_type=jnp.float32 — the MXU would accumulate at the "
+    "input dtype.")
+KRN103 = register(
+    "KRN103", "blockspec-arity", "error", "kernel",
+    "A BlockSpec index_map's parameter count does not match the "
+    "pallas_call grid rank; the kernel would fail (or silently broadcast) "
+    "at lowering time.")
+KRN104 = register(
+    "KRN104", "tuned-op-unregistered", "error", "kernel",
+    "A tuning-cache lookup names an op that no autotune entry point ever "
+    "writes — tuned=True would silently never hit.")
+KRN105 = register(
+    "KRN105", "tuned-key-arity", "error", "kernel",
+    "A tuning-cache lookup's shape-key arity differs from what the "
+    "autotuner persists for that op — the key never matches, so tuned=True "
+    "silently falls back to defaults.")
+KRN106 = register(
+    "KRN106", "autotune-without-lattice", "error", "kernel",
+    "An autotune entry point does not sweep a `*_candidates` lattice, or "
+    "its lattice has no VMEM-budget (`*_vmem_bytes`) feasibility model — "
+    "candidates could exceed on-chip memory.")
+KRN107 = register(
+    "KRN107", "tuned-op-never-consulted", "warn", "kernel",
+    "The autotuner persists entries for an op that nothing in the analyzed "
+    "tree ever looks up (dead tuning entries).")
+
+# -- jit hygiene -------------------------------------------------------------
+JIT201 = register(
+    "JIT201", "obs-inside-jit", "error", "jit",
+    "An obs span/metric/dispatch call is reachable from a jitted or Pallas "
+    "kernel function.  The observability contract (docs/observability-"
+    "guide.md) is instrumentation strictly outside jit; inside traced code "
+    "it runs at trace time only — or retraces.  Use jax.named_scope inside "
+    "jit instead.")
+JIT202 = register(
+    "JIT202", "host-effect-inside-jit", "error", "jit",
+    "A host-side clock or RNG call (time.*, random.*, np.random.*, "
+    "datetime.now) is reachable from jitted code: it executes once at trace "
+    "time and is baked into the program as a constant.  Use jax.random with "
+    "threaded keys, or hoist the call outside the jit.")
+JIT203 = register(
+    "JIT203", "mutable-default-in-jit", "error", "jit",
+    "A function reachable from jitted code has a mutable default argument "
+    "(list/dict/set): the default is captured at trace time and shared "
+    "across calls/programs.")
+JIT204 = register(
+    "JIT204", "global-capture-in-jit", "error", "jit",
+    "A function reachable from jitted code declares `global`, or reads a "
+    "module-level mutable (list/dict/set) that the module mutates elsewhere "
+    "— the value is captured at trace time and later mutation never "
+    "re-traces.")

@@ -1,0 +1,152 @@
+"""Source loading + per-line `# repro: noqa[...]` pragma suppression.
+
+Pragma syntax (modeled on flake8's noqa, namespaced so generic linters
+ignore it):
+
+    x = do_thing()          # repro: noqa[KRN102]
+    y = other_thing()       # repro: noqa[KRN101,JIT201]
+    z = last_thing()        # repro: noqa          <- suppresses every rule
+
+A suppression applies to findings anchored on its line.  Unknown rule IDs
+inside the brackets raise ANA002 (a typo'd suppression that silently stops
+suppressing is worse than noise).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .findings import Finding
+from .rules import RULES
+
+NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa(?:\s*\[(?P<rules>[A-Za-z0-9_,\s]*)\])?")
+
+
+@dataclasses.dataclass
+class Suppressions:
+    """Per-file map of line -> suppressed rule IDs (None = all rules)."""
+
+    by_line: Dict[int, Optional[Set[str]]]
+    unknown: List[Tuple[int, str]]  # (line, bad rule id) for ANA002
+
+    def is_suppressed(self, line: int, rule_id: str) -> bool:
+        if line not in self.by_line:
+            return False
+        rules = self.by_line[line]
+        return rules is None or rule_id in rules
+
+
+def _iter_comments(text: str, lines: List[str]):
+    """(line, comment_text) pairs — real comments only, via tokenize, so a
+    docstring *showing* the pragma syntax never counts as a suppression.
+    Falls back to a whole-line scan if the file does not tokenize."""
+    try:
+        import io
+        import tokenize
+
+        toks = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        for i, line in enumerate(lines, start=1):
+            yield i, line
+        return
+    for tok in toks:
+        if tok.type == tokenize.COMMENT:
+            yield tok.start[0], tok.string
+
+
+def scan_pragmas(text: str, lines: List[str]) -> Suppressions:
+    by_line: Dict[int, Optional[Set[str]]] = {}
+    unknown: List[Tuple[int, str]] = []
+    for i, comment in _iter_comments(text, lines):
+        m = NOQA_RE.search(comment)
+        if not m:
+            continue
+        spec = m.group("rules")
+        if spec is None:
+            by_line[i] = None  # bare noqa: everything
+            continue
+        ids = {r.strip() for r in spec.split(",") if r.strip()}
+        for rid in ids:
+            if rid not in RULES:
+                unknown.append((i, rid))
+        by_line[i] = ids
+    return Suppressions(by_line=by_line, unknown=unknown)
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str
+    text: str
+    lines: List[str]
+    tree: Optional[ast.AST]  # None when the file does not parse
+    parse_error: Optional[str]
+    suppressions: Suppressions
+
+    def find_line(self, needle: str, default: int = 1) -> int:
+        """First 1-based line containing `needle` (shape-audit attribution:
+        point the finding at the offending literal, so a noqa pragma on that
+        line suppresses it naturally)."""
+        for i, text in enumerate(self.lines, start=1):
+            if needle in text:
+                return i
+        return default
+
+
+def load_source(path: str) -> SourceFile:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    lines = text.splitlines()
+    tree: Optional[ast.AST] = None
+    err: Optional[str] = None
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        err = f"{e.msg} (line {e.lineno})"
+    return SourceFile(path=path, text=text, lines=lines, tree=tree,
+                      parse_error=err,
+                      suppressions=scan_pragmas(text, lines))
+
+
+def iter_python_files(paths: List[str]) -> List[str]:
+    """Expand files/directories into a sorted, deduped .py file list
+    (skipping __pycache__ and hidden directories)."""
+    out: List[str] = []
+    seen: Set[str] = set()
+
+    def add(p: str):
+        p = os.path.normpath(p)
+        if p not in seen:
+            seen.add(p)
+            out.append(p)
+
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                add(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__" and not d.startswith("."))
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    add(os.path.join(root, name))
+    return out
+
+
+def engine_findings(sf: SourceFile) -> List[Finding]:
+    """Findings the loader itself raises: parse errors and bad pragmas."""
+    out: List[Finding] = []
+    if sf.parse_error is not None:
+        out.append(Finding(sf.path, 1, "ANA001", "error",
+                           f"syntax error: {sf.parse_error}"))
+    for line, rid in sf.suppressions.unknown:
+        out.append(Finding(
+            sf.path, line, "ANA002", "warn",
+            f"pragma names unknown rule {rid!r}",
+            fix_hint="check the rule catalog: python -m repro.analysis "
+                     "--list-rules"))
+    return out

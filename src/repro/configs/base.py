@@ -9,7 +9,6 @@ parameters.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +99,14 @@ class ModelConfig:
     mtp_depth: int = 0
 
     dtype: str = "bfloat16"
+
+    # Deployment intent, consumed by the static shape audit
+    # (repro.analysis.shape_audit): error-severity shape findings gate CI
+    # only for production configs.  Pedagogical / deliberately-misaligned
+    # configs (the GPT-3 2.7B case-study variants, the smoke configs) set
+    # False so they stay usable in tests and examples while still being
+    # *flagged* (at warn severity).
+    production: bool = True
 
     # ------------------------------------------------------------------
     def __post_init__(self):

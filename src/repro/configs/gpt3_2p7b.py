@@ -4,7 +4,6 @@ C0 is Brown et al.'s original shape (a=32, head_dim 80 — misaligned, copied
 by GPT-Neo/OPT/RedPajama/Pythia).  C1/C2 are the paper's variants; C3 (a=20,
 head_dim 128) is the paper's recommended fix and the TPU-optimal one.
 """
-import dataclasses
 
 from .base import ModelConfig
 from .registry import register
@@ -16,6 +15,10 @@ def _variant(tag: str, heads: int) -> ModelConfig:
         num_layers=32, d_model=2560, num_heads=heads, num_kv_heads=heads,
         d_ff=10240, vocab_size=50257,
         mlp_type="gelu", norm_type="layernorm",
+        # Paper case-study shapes: C0's head_dim 80 / vocab 50257 are the
+        # misalignments under study, not a deployment target — keep the
+        # static shape audit (SHP1xx) from gating CI on them.
+        production=False,
     )
 
 

@@ -25,6 +25,10 @@ _SMOKE: Dict[str, ModelConfig] = {}
 
 def register(cfg: ModelConfig, smoke: ModelConfig):
     _REGISTRY[cfg.name] = cfg
+    # Smoke configs are deliberately tiny (and sometimes deliberately
+    # misaligned); never let their shape findings gate CI.
+    if smoke.production:
+        smoke = dataclasses.replace(smoke, production=False)
     _SMOKE[cfg.name] = smoke
     return cfg
 

@@ -10,7 +10,9 @@ from .registry import register
 
 FULL = ModelConfig(
     name="zamba2-2.7b", family="hybrid",
-    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    # Published Zamba2 shape: head_dim 80 is the misalignment under study
+    # (see module docstring) — reproduce it, don't "fix" it.
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,  # repro: noqa[SHP102]
     d_ff=10240, vocab_size=32000,
     mlp_type="gelu", attn_type="gqa",
     ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,

@@ -5,13 +5,11 @@ flash kernel vs the naive score+AOV pair on v5e, and (ii) a CPU wall-clock
 comparison of the XLA blocked twin vs naive attention at small scale, plus
 the HLO-measured byte reduction (the actual mechanism).
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.hardware import get_hardware
-from repro.core.hlo_analysis import analyze_hlo
 
 from .common import wall_us
 

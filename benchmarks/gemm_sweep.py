@@ -4,7 +4,6 @@ Analytic TFLOP/s on TPU v5e (target) and A100 (paper-fidelity: reproduces
 the wave-quantization dips of Fig. 5b).  A CPU wall-clock smoke at tiny
 sizes checks the monotone trend.
 """
-import jax
 import jax.numpy as jnp
 
 from repro.core.gemm_model import GEMM, estimate

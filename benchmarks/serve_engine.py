@@ -140,7 +140,7 @@ def run_prefix(cfg, params, *, prefix_share=PREFIX_SHARE,
                         **stats.to_json()})
     tok_speedup = stats_warm.tok_s / max(stats_slot.tok_s, 1e-9)
     ttft_speedup = hit_ttft_speedup(done_warm)
-    rows.append((f"serve_prefix/speedup", "0",
+    rows.append(("serve_prefix/speedup", "0",
                  f"{tok_speedup:.2f}x_tok_s_{ttft_speedup:.2f}x_ttft_hit"))
     summary = {
         "workload": {"num_requests": num_requests,

@@ -28,7 +28,6 @@ import argparse
 import json
 
 import jax
-import jax.numpy as jnp
 
 from .common import wall_us
 

@@ -8,7 +8,6 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.configs.base import SHAPES
 from repro.configs.registry import get_config, list_archs
 from repro.core import advisor
 

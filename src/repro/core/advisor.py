@@ -18,9 +18,8 @@ from typing import List, Optional
 
 from ..configs.base import ModelConfig, ShapeConfig, TRAIN_4K
 from .hardware import Hardware, get_hardware
-from .gemm_model import (GEMM, MeasuredProfile, estimate_many,
-                         throughput_tflops, total_time)
-from .transformer_gemms import layer_gemms, model_gemms
+from .gemm_model import MeasuredProfile, throughput_tflops, total_time
+from .transformer_gemms import model_gemms
 from .quantization import pow2_factor, round_up, shard_quantization
 
 
@@ -194,7 +193,6 @@ def advise(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
     lane = hw.tile_2byte[1]
     base_t = step_time(cfg, shape, hw, tp, microbatch, profile)
     base_params = cfg.param_count()
-    base_tflops = score(cfg, shape, hw, tp, microbatch, profile)
     props: List[Proposal] = []
 
     def consider(new_cfg: ModelConfig, change: str):

@@ -18,7 +18,6 @@ analytic calibration ratio, so relative comparisons stay on one scale.
 from __future__ import annotations
 
 import dataclasses
-import math
 import statistics
 from typing import Dict, Optional, Tuple
 

@@ -8,7 +8,6 @@ paper's GPUs (for paper-fidelity benchmark regeneration).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

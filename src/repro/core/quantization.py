@@ -14,7 +14,6 @@ divisibility (see `shard_quantization`).
 """
 from __future__ import annotations
 
-import math
 
 from .hardware import Hardware
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 import math
 from typing import List
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ModelConfig
 from .gemm_model import GEMM
 from .quantization import ceil_div
 

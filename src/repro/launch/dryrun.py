@@ -24,7 +24,6 @@ Usage:
 """
 import argparse
 import dataclasses
-import functools
 import json
 import sys
 import time
@@ -34,18 +33,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..configs.base import (MeshConfig, ModelConfig, ShapeConfig, SHAPES,
-                            TrainConfig)
-from ..configs.registry import get_config, list_archs
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES, TrainConfig
+from ..configs.registry import get_config
 from ..core import advisor, hlo_analysis, roofline
 from ..core.hardware import get_hardware
-from ..launch.input_specs import (cache_structs, input_specs, opt_structs,
-                                  param_structs)
+from ..launch.input_specs import input_specs, opt_structs, param_structs
 from ..launch.mesh import make_production_mesh, production_mesh_config
 from ..optim.adamw import OptState
 from ..parallel import sharding as sh
 from ..serving.serve_step import make_decode_step, make_prefill_step
-from ..train.train_step import make_train_step, num_microbatches
+from ..train.train_step import make_train_step
 
 ASSIGNED = [
     "zamba2-2.7b", "qwen1.5-4b", "nemotron-4-340b", "internlm2-1.8b",

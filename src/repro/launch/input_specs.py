@@ -4,12 +4,12 @@ shardable, zero allocation.  This is what the dry-run lowers against.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import MeshConfig, ModelConfig, ShapeConfig, TrainConfig
+from ..configs.base import ModelConfig, ShapeConfig, TrainConfig
 from ..data.pipeline import batch_shapes
 from ..models import init_lm, init_caches
 from ..models.layers import compute_dtype

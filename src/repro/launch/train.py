@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .. import obs
 from ..configs.base import MeshConfig, ShapeConfig, TrainConfig

@@ -16,8 +16,7 @@ Supports sequential and parallel-layers (§VI-C1) residual forms.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ Parameter pytree layout:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

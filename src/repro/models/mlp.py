@@ -7,7 +7,6 @@ advisor's `_candidate_dff` search).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .layers import activation, dense_init

@@ -36,7 +36,7 @@ import logging
 import re
 import threading
 import time
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional
 
 _COMPILING_RE = re.compile(
     r"^Compiling (\S+) with global shapes and types (.*?)\.\s*Argument",

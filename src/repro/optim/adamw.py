@@ -14,8 +14,7 @@ deepseek-v3.  EXPERIMENTS.md §Perf documents the measurement.)
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ by the `--pp` dryrun treatment.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -13,10 +13,9 @@ lowering).  Parameters carry one dim sharded on `model` (TP) and one on
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import MeshConfig, ModelConfig

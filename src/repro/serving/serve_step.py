@@ -7,8 +7,6 @@ parallel/sharding.cache_specs); SSM states are head-sharded.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ O(layers x carry) instead of O(layers x activations).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ the loop between the roofline prediction and the kernel that actually runs.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Tuple
 
 from ..core.hardware import Hardware, get_hardware

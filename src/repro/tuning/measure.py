@@ -15,7 +15,7 @@ a candidate whose mean wins inside the noise band is not a real ranking.
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple, Union
+from typing import Callable, List
 
 import jax
 

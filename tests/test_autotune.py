@@ -10,7 +10,6 @@ from repro.core.gemm_model import GEMM, MeasuredProfile, estimate
 from repro.core.hardware import get_hardware
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.matmul.ops import matmul
 from repro.kernels.matmul.ref import matmul_ref
 from repro.tuning import (TunedConfig, TuningCache, flash_candidates,

@@ -3,7 +3,6 @@ import os
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

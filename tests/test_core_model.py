@@ -1,13 +1,12 @@
 """Core co-design engine: paper formulas, quantization math, advisor case
 studies (Fig. 1, §VII-B, Fig. 20)."""
-import dataclasses
 
 import pytest
 
-from repro.configs.base import ModelConfig, TRAIN_4K
+from repro.configs.base import ModelConfig
 from repro.core import (advisor, gemm_model, quantization as q,
                         transformer_gemms as tg)
-from repro.core.hardware import A100_40GB, TPU_V5E, get_hardware
+from repro.core.hardware import A100_40GB, TPU_V5E
 
 
 def vanilla(h=2560, L=32, a=32, v=50257, s=2048):

@@ -2,11 +2,9 @@
 collective byte census — validated against a known jit program."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.hlo_analysis import analyze_hlo, parse_module
-from repro.core.roofline import collective_bytes
 
 
 def _hlo(fn, *args):
@@ -72,7 +70,9 @@ class TestAnalyzer:
 
 class TestCollectiveCensus:
     def test_psum_counted_as_all_reduce(self):
-        import subprocess, sys, textwrap
+        import subprocess
+        import sys
+        import textwrap
         # collectives need >1 device: run in a subprocess with 4 host devices
         code = textwrap.dedent("""
             import os

@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ShapeConfig, TrainConfig
-from repro.configs.registry import get_smoke_config, list_archs
+from repro.configs.registry import get_smoke_config
 from repro.data.pipeline import make_batch
-from repro.models import apply_lm, init_caches, init_lm, lm_loss
+from repro.models import apply_lm, init_caches, init_lm
 from repro.optim.adamw import init_opt
 from repro.train.train_step import make_train_step
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.mlp import apply_mlp, init_mlp
+from repro.models.mlp import apply_mlp
 from repro.models.moe import _capacity, apply_moe, init_moe
 
 KEY = jax.random.PRNGKey(5)

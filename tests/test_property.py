@@ -3,7 +3,6 @@
 hypothesis is a dev-only dependency (requirements-dev.txt); on a clean
 checkout without it the module skips instead of failing collection.
 """
-import dataclasses
 
 import pytest
 
@@ -15,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.configs.base import ModelConfig, TRAIN_4K
+from repro.configs.base import ModelConfig
 from repro.core import advisor, quantization as q
 from repro.core.gemm_model import GEMM, estimate
 from repro.core.hardware import TPU_V5E, A100_40GB

@@ -9,7 +9,6 @@ import pytest
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import MeshConfig
 from repro.configs.registry import get_smoke_config
 from repro.models import init_lm
 from repro.parallel import sharding as sh

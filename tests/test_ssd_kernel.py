@@ -41,7 +41,7 @@ def test_ssd_kernel_sweep(bh, nc, Q, P, N, dtype):
 def test_kernel_matches_model_ssd_intra_chunk():
     """The kernel's Y_diag must equal models/ssm.py's intra-chunk term."""
     from repro.configs.registry import get_smoke_config
-    from repro.models.ssm import _dims, init_ssm
+    from repro.models.ssm import _dims
 
     cfg = get_smoke_config("mamba2-780m")
     di, N, P, nh, g = _dims(cfg)

@@ -7,12 +7,10 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs.base import ShapeConfig, TrainConfig, SHAPES
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.configs.registry import get_config, get_smoke_config, list_archs
-from repro.core import advisor
 from repro.core.hlo_analysis import analyze_hlo
 
 

@@ -1,0 +1,4 @@
+"""Fixture: a typo'd suppression raises ANA002 instead of silently
+suppressing nothing."""
+
+X = 1  # repro: noqa[KRN999]

@@ -1,0 +1,12 @@
+"""Fixture: tuned-op lookups that break the cross-module contract."""
+from ...tuning.cache import lookup
+
+
+def run_myop(x, w, hw):
+    m, k = x.shape
+    _, n = w.shape
+    # KRN105: 3-element shape key; the autotuner persists a 2-element one
+    cfg = lookup("myop", (m, k, n), x.dtype, hw)
+    # KRN104: no autotune entry point ever writes ghost_op
+    ghost = lookup("ghost_op", (m, n), x.dtype, hw)
+    return cfg, ghost

@@ -1,0 +1,19 @@
+"""Fixture: one lattice with a VMEM feasibility bound, one without."""
+
+
+def myop_vmem_bytes(bm, bn, dtype_bytes=2):
+    return 2 * bm * bn * dtype_bytes
+
+
+def myop_candidates(m, k, n, vmem_budget=16 * 2 ** 20):
+    out = []
+    for bm in (128, 256):
+        for bn in (128, 256):
+            if myop_vmem_bytes(bm, bn) <= vmem_budget:
+                out.append((bm, bn))
+    return out
+
+
+def orphan_candidates(m, n):
+    # KRN106 (via autotune_dead): no *_vmem_bytes feasibility model
+    return [(128, 128), (256, 256)]

@@ -1,0 +1,24 @@
+"""Fixture: autotune entry points that break the tuned-op contract."""
+from .cache import TunedConfig
+from .candidates import myop_candidates, orphan_candidates
+
+
+def autotune_myop(m, k, n, hw):
+    best = None
+    for bm, bn in myop_candidates(m, k, n):
+        best = (bm, bn)
+    # KRN105 counterpart: persists a 2-element shape key
+    return TunedConfig(op="myop", shape=(m, k), block=best)
+
+
+def autotune_dead(m, n, hw):
+    best = None
+    for blk in orphan_candidates(m, n):
+        best = blk
+    # KRN107: nothing ever looks dead_op up
+    return TunedConfig(op="dead_op", shape=(m, n), block=best)
+
+
+def autotune_nolattice(m, n, hw):
+    # KRN106: persists without sweeping a *_candidates lattice
+    return TunedConfig(op="nolattice_op", shape=(m, n), block=(128, 128))

@@ -1,0 +1,45 @@
+"""Fixture: every JIT rule fires on this file."""
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+
+_CACHE = {}
+
+
+@jax.jit
+def traced_obs(x):
+    # JIT201: obs call inside traced code
+    with obs.span("inner"):
+        return x * 2
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def traced_clock(x, n):
+    # JIT202: host clock freezes to a trace-time constant
+    return x + time.time()
+
+
+def make_step():
+    def step(x, scales=[1.0]):  # JIT203: mutable default on a traced def
+        _CACHE["last"] = 1  # writes keep _CACHE "mutated" for JIT204
+        return x * scales[0]
+
+    return jax.jit(step)
+
+
+@jax.jit
+def traced_capture(x):
+    # JIT204: reads a module-level mutable that the module mutates
+    return x + len(_CACHE)
+
+
+@jax.jit
+def traced_global(x):
+    # JIT204: global declaration inside traced code
+    global _CACHE
+    _CACHE = {}
+    return x

@@ -1,0 +1,17 @@
+"""Fixture: jit_bad.py's hazards, pragma-suppressed line by line."""
+import time
+
+import jax
+
+from repro import obs
+
+
+@jax.jit
+def traced_obs(x):
+    with obs.span("inner"):  # repro: noqa[JIT201]
+        return x * 2
+
+
+@jax.jit
+def traced_clock(x):
+    return x + time.time()  # repro: noqa[JIT202]

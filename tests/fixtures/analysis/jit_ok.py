@@ -1,0 +1,29 @@
+"""Fixture: the hygienic twin of jit_bad.py — zero findings.
+
+Instrumentation lives in the un-jitted wrapper; in-trace labels use
+jax.named_scope; RNG is threaded jax.random keys; the trace-time constant
+dict is never mutated.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+
+_SCALES = {"default": 1.0}  # read-only: a legitimate trace-time constant
+
+
+@jax.jit
+def _step(x, key):
+    with jax.named_scope("step"):
+        noise = jax.random.normal(key, x.shape)
+        return x * _SCALES["default"] + noise
+
+
+def step(x, key):
+    t0 = time.perf_counter()
+    with obs.span("step"):
+        y = _step(x, key)
+    obs.histogram("step_time_s", time.perf_counter() - t0)
+    return y

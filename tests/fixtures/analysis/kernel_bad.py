@@ -1,0 +1,30 @@
+"""Fixture: every per-file KRN rule fires on this file."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    # KRN102: dot without preferred_element_type
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bad_matmul(x, w):
+    m, k = x.shape
+    _, n = w.shape
+    grid = (m // 128, n // 128, k // 128)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((128, 128), lambda i, j, s: (i, s)),
+            # KRN103: 2-arg index map against a rank-3 grid
+            pl.BlockSpec((128, 128), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j, s: (i, j)),
+        # KRN101: bf16 accumulator scratch
+        scratch_shapes=[pltpu.VMEM((128, 128), jnp.bfloat16)],
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x, w)

@@ -1,0 +1,27 @@
+"""Fixture: kernel_bad.py with every violation pragma-suppressed."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])  # repro: noqa[KRN102]
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def bad_matmul(x, w):
+    m, k = x.shape
+    _, n = w.shape
+    grid = (m // 128, n // 128, k // 128)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((128, 128), lambda i, j, s: (i, s)),
+            pl.BlockSpec((128, 128), lambda i, j: (0, j)),  # repro: noqa[KRN103]
+        ],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j, s: (i, j)),
+        scratch_shapes=[pltpu.VMEM((128, 128), jnp.bfloat16)],  # repro: noqa
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x, w)

@@ -1,0 +1,3 @@
+"""Fixture: ANA001 — does not parse."""
+def broken(:
+    pass

@@ -6,6 +6,7 @@
 """
 import argparse
 import json
+import os
 from collections import defaultdict
 
 HW_NOTE = (
@@ -170,7 +171,6 @@ def perf_section(perf_rows_by_cell):
         out.append("")
         out.append("Hypothesis log:")
         for r in rows:
-            verdict = ""
             out.append(f"- **{r.get('tag')}**: {r.get('hypothesis', '')}")
         out.append("")
     return out
@@ -307,6 +307,44 @@ def obs_section(dump_dir):
     return out
 
 
+def analysis_section(paths):
+    """Static-analysis summary from the codesign lint engine
+    (`repro.analysis`): per-rule counts plus every priced shape finding, so
+    EXPERIMENTS.md records which measured inefficiencies were *predicted*
+    from shapes alone (docs/static-analysis-guide.md has the rule catalog)."""
+    from repro.analysis import analyze
+    from repro.analysis.rules import RULES
+
+    result = analyze(paths, registry_audit=True)
+    out = ["## §Static analysis", "",
+           f"`python -m repro.analysis {' '.join(paths)}` over "
+           f"{result.files_scanned} files + the config registry "
+           "(tpu_v5e target).  Errors gate CI; warns are tracked "
+           "(smoke configs and runtime-mitigated shapes are downgraded "
+           "by design).", ""]
+    by_rule = defaultdict(list)
+    for f in result.findings:
+        by_rule[f.rule_id].append(f)
+    out.append("| rule | name | severity | findings |")
+    out.append("|---|---|---|---|")
+    for rid in sorted(by_rule):
+        rule = RULES[rid]
+        worst = max(by_rule[rid],
+                    key=lambda f: ("info", "warn", "error").index(f.severity))
+        out.append(f"| {rid} | {rule.name} | {worst.severity} | "
+                   f"{len(by_rule[rid])} |")
+    out.append("")
+    priced = [f for f in result.findings
+              if f.rule_id.startswith("SHP") and "est." in f.fix_hint]
+    if priced:
+        out.append("Priced shape findings (analytic GEMM model):")
+        out.append("")
+        for f in priced:
+            out.append(f"- **{f.rule_id}** [{f.arch}] {f.fix_hint}")
+        out.append("")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", default="dryrun_results.jsonl")
@@ -322,10 +360,13 @@ def main():
                     help="observability dump dir from obs.export_all "
                          "(e.g. `repro.launch.serve --obs-dump`); embeds the "
                          "span/compile/drift summary")
+    ap.add_argument("--analysis", nargs="*", default=None, metavar="PATH",
+                    help="embed the repro.analysis static-analysis summary "
+                         "(default scan path: src); pass paths to override")
     ap.add_argument("--out", default="EXPERIMENTS.md")
     args = ap.parse_args()
 
-    dry = _load(args.dryrun)
+    dry = _load(args.dryrun) if os.path.exists(args.dryrun) else []
     perf = {}
     for p in args.perf:
         cell = p.split("perf_")[-1].split(".")[0]
@@ -335,9 +376,11 @@ def main():
              "Generated by `python -m benchmarks.report` from "
              "dryrun_results.jsonl / perf_*.jsonl / serve_engine.jsonl "
              "(regenerate any time).", ""]
-    lines += dryrun_section(dry)
-    lines += roofline_section(dry)
-    lines += perf_section(perf)
+    if dry:
+        lines += dryrun_section(dry)
+        lines += roofline_section(dry)
+    if perf:
+        lines += perf_section(perf)
     if args.train_attn:
         lines += train_attention_section(_load(args.train_attn))
     if args.mlp_fusion:
@@ -346,6 +389,8 @@ def main():
         lines += serve_section(_load(args.serve))
     if args.obs:
         lines += obs_section(args.obs)
+    if args.analysis is not None:
+        lines += analysis_section(args.analysis or ["src"])
     with open(args.out, "w") as f:
         f.write("\n".join(lines))
     print(f"wrote {args.out} ({len(lines)} lines)")

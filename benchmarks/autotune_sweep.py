@@ -17,12 +17,17 @@ from repro.core.hardware import get_hardware
 from repro.tuning import TuningCache
 from repro.tuning.search import (autotune_flash_attention,
                                  autotune_flash_backward, autotune_fused_mlp,
+                                 autotune_int8_fused_mlp, autotune_int8_matmul,
                                  autotune_matmul)
 
 MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256), (384, 256, 128)]
 FLASH_SHAPES = [(1, 256, 2, 64)]  # (batch, seq, heads, head_dim)
 # (m, h, f) fused SwiGLU hidden shapes: aligned f and the 8h/3 heuristic f
 FUSED_MLP_SHAPES = [(256, 256, 768), (256, 256, 683)]
+# low-precision lattices tune separately: the int8 VMEM model admits larger
+# k blocks (1-byte operands), so the winner need not match the f32 one
+INT8_MATMUL_SHAPES = [(256, 256, 256)]
+INT8_FUSED_MLP_SHAPES = [(256, 256, 768)]
 
 
 def run():
@@ -69,4 +74,23 @@ def run():
             f"blocks={blk['block_m']}x{blk['block_f']}x{blk['block_k']};"
             f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
             f"candidates={cfg.candidates_tried}"))
+    for m, k, n in INT8_MATMUL_SHAPES:
+        cfg = autotune_int8_matmul(m, k, n, hw=hw, cache=cache, iters=2,
+                                   warmup=1, max_candidates=4)
+        blk = cfg.blocks
+        rows.append((
+            f"autotune_sweep/int8_matmul_{m}x{k}x{n}", round(cfg.time_us, 1),
+            f"blocks={blk['block_m']}x{blk['block_n']}x{blk['block_k']};"
+            f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
+            f"candidates={cfg.candidates_tried};dtype={cfg.dtype}"))
+    for m, h, f in INT8_FUSED_MLP_SHAPES:
+        cfg = autotune_int8_fused_mlp(m, h, f, hw=hw, cache=cache, iters=2,
+                                      warmup=1, max_candidates=4)
+        blk = cfg.blocks
+        rows.append((
+            f"autotune_sweep/int8_fused_mlp_{m}x{h}x{f}",
+            round(cfg.time_us, 1),
+            f"blocks={blk['block_m']}x{blk['block_f']}x{blk['block_k']};"
+            f"speedup_vs_128={cfg.speedup_vs_default:.2f};"
+            f"candidates={cfg.candidates_tried};dtype={cfg.dtype}"))
     return rows

@@ -226,6 +226,59 @@ def mlp_fusion_section(rows):
     return out
 
 
+def quant_section(rows):
+    """Low-precision report: CPU-smoke kernel parity plus the tpu_v5e
+    analytic dtype pricing and KV slots-per-GiB economics
+    (`benchmarks/quant_sweep.py`)."""
+    cpu = [r for r in rows if r["type"] in ("gemm_cpu", "mlp_cpu")]
+    analytic = [r for r in rows if r["type"] == "analytic"]
+    kv_slots = [r for r in rows if r["type"] == "kv_slots"]
+    kv_cpu = [r for r in rows if r["type"] == "kv_cpu"]
+    out = ["## §Low precision", "",
+           "int8/fp8 execution (`kernels/quantized`, `linear_impl="
+           "\"quantized\"`, `kv_dtype=\"int8\"`).  CPU container: kernel "
+           "rows run in Pallas interpret mode, so their wall-clock proves "
+           "parity, not speed — the deployment signal is the analytic "
+           "dtype pricing (tpu_v5e roofline with dtype_bytes as an axis; "
+           "bandwidth-only, so int8's MXU-rate bonus would only widen the "
+           "win).  See docs/quantization-guide.md.", ""]
+    if cpu:
+        out.append("| kernel | shape | cpu us (interpret) | rel err vs f32 |")
+        out.append("|---|---|---|---|")
+        for r in cpu:
+            shape = (f"{r['m']}x{r['k']}x{r['n']}" if "k" in r
+                     else f"{r['m']}x{r['h']}x{r['f']}")
+            out.append(f"| {r['impl']} | {shape} | {r['cpu_us']:.0f} | "
+                       f"{r['rel_err']:.4f} |")
+        out.append("")
+    if analytic:
+        out.append("| arch | mode | gemm | m,k,n | bound | recommended | "
+                   "speedup | layers |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for r in analytic:
+            out.append(
+                f"| {r['arch']} | {r['mode']} | {r['name']} | "
+                f"{r['m']},{r['k']},{r['n']} | {r['bound']} | "
+                f"{r['recommended_dtype']} | {r['speedup']:.2f}x | "
+                f"{r['count']} |")
+        out.append("")
+    if kv_cpu or kv_slots:
+        out.append("KV cache at `kv_dtype=\"int8\"` (per-(token, head) f32 "
+                   "scales ride alongside the int8 pool):")
+        out.append("")
+        for r in kv_cpu:
+            out.append(f"- paged decode rel err vs f32 pool: "
+                       f"{r['rel_err']:.4f} "
+                       f"(pool {r['slots']}x{r['s_max']}x{r['nkv']}x{r['d']})")
+        for r in kv_slots:
+            out.append(
+                f"- {r['arch']}: {r['slots_per_gib_auto']} -> "
+                f"{r['slots_per_gib_int8']} slots/GiB at "
+                f"max_seq={r['max_seq']} ({r['gain']:.2f}x)")
+        out.append("")
+    return out
+
+
 def serve_section(rows):
     """Serving-engine latency report: aggregate tok/s is not the whole
     story — per-request TTFT and inter-token percentiles are what a serving
@@ -356,6 +409,8 @@ def main():
                          "benchmarks.train_attention_sweep")
     ap.add_argument("--mlp-fusion", default=None,
                     help="mlp_fusion.jsonl from benchmarks.mlp_fusion_sweep")
+    ap.add_argument("--quant", default=None,
+                    help="quant.jsonl from benchmarks.quant_sweep")
     ap.add_argument("--obs", default=None, metavar="DUMPDIR",
                     help="observability dump dir from obs.export_all "
                          "(e.g. `repro.launch.serve --obs-dump`); embeds the "
@@ -385,6 +440,8 @@ def main():
         lines += train_attention_section(_load(args.train_attn))
     if args.mlp_fusion:
         lines += mlp_fusion_section(_load(args.mlp_fusion))
+    if args.quant:
+        lines += quant_section(_load(args.quant))
     if args.serve:
         lines += serve_section(_load(args.serve))
     if args.obs:

@@ -22,6 +22,7 @@ MODULES = [
     "serve_engine",          # beyond-paper: continuous batching vs static
     "train_attention_sweep", # beyond-paper: fused-attn training step times
     "mlp_fusion_sweep",      # beyond-paper: fused vs unfused MLP, d_ff alignment
+    "quant_sweep",           # beyond-paper: int8/fp8 GEMMs, int8 KV, dtype pricing
 ]
 
 

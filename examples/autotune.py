@@ -28,7 +28,7 @@ from repro.kernels.matmul.ref import matmul_ref
 from repro.tuning import TuningCache, set_default_cache
 from repro.tuning.search import (autotune_flash_attention,
                                  autotune_flash_backward, autotune_fused_mlp,
-                                 autotune_matmul)
+                                 autotune_int8_matmul, autotune_matmul)
 
 MATMUL_SHAPES = [(256, 256, 256), (256, 512, 256)]
 # (m, h, f) for the fused SwiGLU hidden: f = 683 is the 8h/3 heuristic for
@@ -73,6 +73,14 @@ def main() -> None:
           f"({b['block_m']},{b['block_f']},{b['block_k']}) "
           f"{mcfg.time_us:.0f} us, {mcfg.speedup_vs_default:.2f}x vs 128^3 "
           f"(linear_impl=\"fused\" MLPs pick this up via tuned=True)")
+    m, k, n = MATMUL_SHAPES[0]
+    qcfg = autotune_int8_matmul(m, k, n, cache=cache, iters=args.iters,
+                                warmup=1, max_candidates=4)
+    b = qcfg.blocks
+    print(f"  int8_matmul {m}x{k}x{n}: best blocks "
+          f"({b['block_m']},{b['block_n']},{b['block_k']}) "
+          f"{qcfg.time_us:.0f} us, key dtype \"{qcfg.dtype}\" — the mixed "
+          f"activation x weight key linear_impl=\"quantized\" looks up")
     path = cache.save(args.cache)
     print(f"  saved {len(cache)} entries -> {path}")
 

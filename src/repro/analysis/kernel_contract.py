@@ -82,6 +82,16 @@ def _is_f32(node: Optional[ast.expr]) -> bool:
     return d is not None and _last_attr(d) in ("float32", "f32")
 
 
+def _is_wide_accum(node: Optional[ast.expr]) -> bool:
+    """f32 or i32: int8 GEMMs accumulate exactly in int32 (the MXU's native
+    int8 path), so an i32 preferred_element_type is as safe as f32."""
+    if node is None:
+        return False
+    d = _dotted(node)
+    return d is not None and _last_attr(d) in ("float32", "f32",
+                                               "int32", "i32")
+
+
 def _int_const(node: Optional[ast.expr]) -> Optional[int]:
     if isinstance(node, ast.Constant) and isinstance(node.value, int):
         return node.value
@@ -155,14 +165,15 @@ def _check_dot_accum(sf: SourceFile) -> List[Finding]:
         if root not in ("jnp", "jax", "lax", "pl", "np", "numpy"):
             continue
         pet = _kw(node, "preferred_element_type")
-        if pet is None or not _is_f32(pet):
+        if pet is None or not _is_wide_accum(pet):
             what = ("missing" if pet is None
                     else f"set to {_dotted(pet) or '?'}")
             out.append(Finding(
                 sf.path, node.lineno, "KRN102", "error",
                 f"{name} in a Pallas kernel file: preferred_element_type "
                 f"{what}; the MXU would accumulate at the input dtype",
-                fix_hint="pass preferred_element_type=jnp.float32"))
+                fix_hint="pass preferred_element_type=jnp.float32 "
+                         "(or jnp.int32 for an int8 GEMM)"))
     return out
 
 

@@ -92,9 +92,9 @@ KRN101 = register(
     "of mantissa per MXU pass.")
 KRN102 = register(
     "KRN102", "dot-missing-f32-accum", "error", "kernel",
-    "A dot/dot_general inside a Pallas kernel body does not request "
-    "preferred_element_type=jnp.float32 — the MXU would accumulate at the "
-    "input dtype.")
+    "A dot/dot_general inside a Pallas kernel body does not request a wide "
+    "accumulator (preferred_element_type=jnp.float32, or jnp.int32 for int8 "
+    "operands) — the MXU would accumulate at the input dtype.")
 KRN103 = register(
     "KRN103", "blockspec-arity", "error", "kernel",
     "A BlockSpec index_map's parameter count does not match the "

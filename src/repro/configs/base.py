@@ -51,7 +51,16 @@ class ModelConfig:
     # "tuned"  = Pallas + per-(m, k, n, dtype, hw) autotuning-cache blocks
     # "fused"  = tuned dispatch + the fused SwiGLU/MLP Pallas kernel for the
     #            MLP gate/up pair (kernels/fused_mlp; the §VII-B hot path)
+    # "quantized" = int8 weight path (kernels/quantized): per-channel weight
+    #            scales, dynamic per-row activation quantization, i32
+    #            accumulate, f32 de-scale — inference-first; gradients fall
+    #            back to the high-precision tuned matmul route
     linear_impl: str = "jnp"
+    # KV-cache storage dtype for serving pools and decode caches:
+    # "auto" = the compute dtype; "int8" = quantized KV (int8 payload plus
+    # per-(token, kv_head) f32 scale leaves — see models/blocks and the
+    # dequantizing paged-decode kernels).  Engine(kv_dtype=...) sets this.
+    kv_dtype: str = "auto"
     # Megatron-style sequence parallelism: residual-stream activations are
     # sequence-sharded on the model axis between TP blocks (norms/adds run
     # 1/t-sharded; XLA converts the TP all-reduce into all-gather +

@@ -138,6 +138,42 @@ def step_time(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
     return mult * total_time(gemms, hw, profile)
 
 
+def precision_plan(cfg: ModelConfig, shape: ShapeConfig = TRAIN_4K,
+                   hw: Optional[Hardware] = None, tp: int = 1,
+                   microbatch: int = 1,
+                   dtypes: tuple = ("bfloat16", "int8"),
+                   min_speedup: float = 1.05) -> List[dict]:
+    """Per-layer GEMM precision recommendations under the analytic model.
+
+    For every named GEMM in the model's step (Table II decomposition), price
+    it at each candidate storage precision and report the winner — the
+    dtype-aware companion to `check_alignment`: decode-mode skinny GEMMs are
+    bandwidth-bound, so int8 weights (kernels.quantized / linear_impl=
+    "quantized") buy their byte ratio, while compute-bound prefill GEMMs
+    stay at the baseline.  Returns one dict per GEMM:
+      {name, m, k, n, bound, recommended_dtype, speedup, candidates}
+    with `candidates` mapping dtype -> predicted time_s.
+    """
+    from .gemm_model import estimate, precision_candidates, recommend_precision
+    hw = hw or get_hardware()
+    mode = "decode" if shape.is_decode else "train"
+    gemms = model_gemms(cfg, microbatch, shape.seq_len, t=tp, mode=mode)
+    plan: List[dict] = []
+    for g in gemms:
+        ests = precision_candidates(g, hw, dtypes)
+        best, speedup = recommend_precision(g, hw, dtypes,
+                                            min_speedup=min_speedup)
+        plan.append({
+            "name": g.name,
+            "m": g.m, "k": g.k, "n": g.n,
+            "bound": estimate(g, hw).bound,
+            "recommended_dtype": best,
+            "speedup": speedup,
+            "candidates": {dt: e.time_s for dt, e in ests.items()},
+        })
+    return plan
+
+
 def _candidate_heads(cfg: ModelConfig, lane: int,
                      max_head_dim: int = 256) -> List[int]:
     """Head counts near cfg.num_heads with aligned head_dim, h unchanged.

@@ -194,3 +194,45 @@ def throughput_tflops(gemms: list[GEMM], hw: Optional[Hardware] = None,
     t = total_time(gemms, hw, profile)
     f = sum(g.flops for g in gemms)
     return f / t / 1e12 if t > 0 else 0.0
+
+
+# --- precision pricing ----------------------------------------------------------------
+
+def precision_candidates(gemm: GEMM, hw: Optional[Hardware] = None,
+                         dtypes: Tuple[str, ...] = ("bfloat16", "int8"),
+                         profile: Optional[MeasuredProfile] = None,
+                         ) -> Dict[str, GEMMEstimate]:
+    """Price the same GEMM at each storage precision.
+
+    Only `dtype_bytes` changes per candidate: the model credits low
+    precision with its bandwidth win (and the int8 sublane granule via
+    tile_utilization), not a higher MXU issue rate — conservative, since
+    the paper's bandwidth-bound serving GEMMs are where the bytes dominate.
+    """
+    hw = hw or get_hardware()
+    return {
+        dt: estimate(
+            dataclasses.replace(gemm, dtype_bytes=_DTYPE_BYTES[dt]),
+            hw, profile)
+        for dt in dtypes
+    }
+
+
+def recommend_precision(gemm: GEMM, hw: Optional[Hardware] = None,
+                        dtypes: Tuple[str, ...] = ("bfloat16", "int8"),
+                        min_speedup: float = 1.05,
+                        profile: Optional[MeasuredProfile] = None,
+                        ) -> Tuple[str, float]:
+    """(best_dtype, speedup_vs_dtypes[0]) under the analytic model.
+
+    Sticks with the baseline precision unless a candidate clears
+    `min_speedup` — a compute-bound GEMM sees ~1.0x from int8 here and the
+    quantization-noise cost isn't worth paying for it.
+    """
+    ests = precision_candidates(gemm, hw, dtypes, profile)
+    base_s = ests[dtypes[0]].time_s
+    best = min(ests, key=lambda d: ests[d].time_s)
+    speedup = base_s / ests[best].time_s if ests[best].time_s > 0 else 1.0
+    if best == dtypes[0] or speedup < min_speedup:
+        return dtypes[0], 1.0
+    return best, speedup

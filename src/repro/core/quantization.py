@@ -11,6 +11,11 @@ TPU mode keeps the first two (MXU pass padding) and replaces the third:
 grid steps on a v5e TensorCore are *sequential*, so the "wave" is a single
 grid step and the tail effect is the partial final block plus shard-level
 divisibility (see `shard_quantization`).
+
+Naming note: this module is about *tile/wave* quantization — utilization
+loss from shapes that do not divide the hardware's native tiles.  *Numeric*
+quantization (compressing values to int8/fp8) lives in `repro.quant`; the
+two share a name in the literature but nothing else.
 """
 from __future__ import annotations
 

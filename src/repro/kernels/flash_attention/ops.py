@@ -29,7 +29,9 @@ import jax.numpy as jnp
 from ... import obs
 from ...core.hardware import get_hardware
 from ...core.quantization import round_up
+from ...quant import dequantize_kv
 from ...tuning.cache import lookup as _tuning_lookup
+from ...tuning.cache import mixed_dtype
 from .backward import flash_attention_bwd_pallas
 from .kernel import flash_attention_pallas
 from .paged import paged_decode_blocktable_pallas, paged_decode_pallas
@@ -195,10 +197,14 @@ def default_interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("block_kv", "interpret",
                                              "use_pallas"))
-def _paged_jit(q, k_pool, v_pool, slot_idx, lengths, *, block_kv: int,
-               interpret: bool, use_pallas: bool):
+def _paged_jit(q, k_pool, v_pool, slot_idx, lengths, k_scale, v_scale, *,
+               block_kv: int, interpret: bool, use_pallas: bool):
     if not use_pallas:
-        return paged_decode_ref(q, k_pool, v_pool, slot_idx, lengths)
+        if k_scale is not None:
+            k_pool = dequantize_kv(k_pool, k_scale, q.dtype)
+            v_pool = dequantize_kv(v_pool, v_scale, q.dtype)
+        return paged_decode_ref(q, k_pool.astype(q.dtype),
+                                v_pool.astype(q.dtype), slot_idx, lengths)
     s_max = k_pool.shape[1]
     bkv = min(block_kv, s_max)
     if s_max % bkv:
@@ -214,11 +220,16 @@ def _paged_jit(q, k_pool, v_pool, slot_idx, lengths, *, block_kv: int,
             pad = round_up(s_max, bkv) - s_max
             k_pool = jnp.pad(k_pool, ((0, 0), (0, pad), (0, 0), (0, 0)))
             v_pool = jnp.pad(v_pool, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if k_scale is not None:
+                k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+                v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
     return paged_decode_pallas(q, k_pool, v_pool, slot_idx, lengths,
+                               k_scale=k_scale, v_scale=v_scale,
                                block_kv=bkv, interpret=interpret)
 
 
 def paged_decode(q, k_pool, v_pool, slot_idx, lengths, *,
+                 k_scale=None, v_scale=None,
                  block_kv: int = 128, interpret: bool = True,
                  use_pallas: bool = True, tuned: bool = False,
                  hw_name: Optional[str] = None):
@@ -228,17 +239,24 @@ def paged_decode(q, k_pool, v_pool, slot_idx, lengths, *,
     (slots, s_max, nkv, d); slot_idx: (b,) row->slot; lengths: (b,) live kv
     entries (0 = dead slot -> zero output).  Returns (b, a, d).
 
+    k_scale/v_scale: (slots, s_max, nkv) f32 per-(token, kv_head) scales
+    for an int8 KV pool (kv_dtype="int8"): the Pallas path dequantizes per
+    kv tile inside the kernel; the jnp path dequantizes the pool up front.
+
     tuned=True overrides block_kv with the autotuning cache's measured-best
     for this pool shape (op "paged_decode") when one exists — see
-    `repro.tuning.search.autotune_paged_decode`.
+    `repro.tuning.search.autotune_paged_decode`.  Quantized pools key the
+    lookup by the mixed dtype pair (e.g. "bfloat16xint8").
     """
     tuned_hit = None
+    dtype = jnp.dtype(q.dtype).name
+    if k_scale is not None:
+        dtype = mixed_dtype(dtype, jnp.dtype(k_pool.dtype).name)
     if tuned and use_pallas:
         b, a, d = q.shape
         slots, s_max, nkv, _ = k_pool.shape
         cfg = _tuning_lookup("paged_decode", (b, slots, s_max, nkv, a, d),
-                             jnp.dtype(q.dtype).name,
-                             hw_name or get_hardware().name)
+                             dtype, hw_name or get_hardware().name)
         tuned_hit = cfg is not None
         if cfg is not None:
             block_kv = cfg.blocks["block_kv"]
@@ -248,17 +266,22 @@ def paged_decode(q, k_pool, v_pool, slot_idx, lengths, *,
             shape=q.shape,
             blocks={"block_kv": block_kv} if use_pallas else None,
             tuned_hit=tuned_hit)
-    return _paged_jit(q, k_pool, v_pool, slot_idx, lengths,
+    return _paged_jit(q, k_pool, v_pool, slot_idx, lengths, k_scale, v_scale,
                       block_kv=block_kv, interpret=interpret,
                       use_pallas=use_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("block_kv", "interpret",
                                              "use_pallas"))
-def _paged_bt_jit(q, k_blocks, v_blocks, block_tables, lengths, *,
-                  block_kv: int, interpret: bool, use_pallas: bool):
+def _paged_bt_jit(q, k_blocks, v_blocks, block_tables, lengths, k_scale,
+                  v_scale, *, block_kv: int, interpret: bool,
+                  use_pallas: bool):
     if not use_pallas:
-        return paged_decode_blocktable_ref(q, k_blocks, v_blocks,
+        if k_scale is not None:
+            k_blocks = dequantize_kv(k_blocks, k_scale, q.dtype)
+            v_blocks = dequantize_kv(v_blocks, v_scale, q.dtype)
+        return paged_decode_blocktable_ref(q, k_blocks.astype(q.dtype),
+                                           v_blocks.astype(q.dtype),
                                            block_tables, lengths)
     block_size = k_blocks.shape[1]
     bkv = min(block_kv, block_size)
@@ -269,10 +292,12 @@ def _paged_bt_jit(q, k_blocks, v_blocks, block_tables, lengths, *,
         bkv = math.gcd(block_size, bkv)
     return paged_decode_blocktable_pallas(q, k_blocks, v_blocks,
                                           block_tables, lengths,
+                                          k_scale=k_scale, v_scale=v_scale,
                                           block_kv=bkv, interpret=interpret)
 
 
 def paged_decode_blocktable(q, k_blocks, v_blocks, block_tables, lengths, *,
+                            k_scale=None, v_scale=None,
                             block_kv: Optional[int] = None,
                             interpret: bool = True, use_pallas: bool = True,
                             tuned: bool = False,
@@ -284,20 +309,27 @@ def paged_decode_blocktable(q, k_blocks, v_blocks, block_tables, lengths, *,
     max_blocks) row -> physical block ids; lengths: (b,) live kv entries
     (0 = dead row -> zero output).  Returns (b, a, d).
 
+    k_scale/v_scale: (num_blocks, block_size, nkv) f32 per-(token, kv_head)
+    scales for an int8 block pool; dequantized per kv tile in-kernel on the
+    Pallas path, up front on the jnp path.
+
     tuned=True overrides block_kv with the autotuning cache's measured-best
     for this block-pool shape (op "paged_decode_blocktable") when one exists
     — see `tuning.search.autotune_paged_decode_blocktable`, which sweeps the
     physical block size jointly and also records the winning pool geometry
     under op "paged_decode_blocktable_pool" for the engine to consult.
+    Quantized pools key the lookup by the mixed dtype pair.
     """
     b, a, d = q.shape
     nb, block_size, nkv, _ = k_blocks.shape
     tuned_hit = None
+    dtype = jnp.dtype(q.dtype).name
+    if k_scale is not None:
+        dtype = mixed_dtype(dtype, jnp.dtype(k_blocks.dtype).name)
     if tuned and use_pallas:
         cfg = _tuning_lookup("paged_decode_blocktable",
                              (b, nb, block_size, nkv, a, d),
-                             jnp.dtype(q.dtype).name,
-                             hw_name or get_hardware().name)
+                             dtype, hw_name or get_hardware().name)
         tuned_hit = cfg is not None
         if cfg is not None:
             block_kv = cfg.blocks["block_kv"]
@@ -309,5 +341,5 @@ def paged_decode_blocktable(q, k_blocks, v_blocks, block_tables, lengths, *,
                     "block_size": block_size} if use_pallas else None,
             tuned_hit=tuned_hit)
     return _paged_bt_jit(q, k_blocks, v_blocks, block_tables, lengths,
-                         block_kv=block_kv or block_size,
+                         k_scale, v_scale, block_kv=block_kv or block_size,
                          interpret=interpret, use_pallas=use_pallas)

@@ -44,9 +44,17 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _paged_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, kv_steps: int, block_kv: int,
-                  scale: float):
+def _paged_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  kv_steps: int, block_kv: int, scale: float):
+    # rest is (o, m, l, acc) for the plain variant, or
+    # (ks, vs, o, m, l, acc) when the pool is int8-quantized KV: the scale
+    # tiles ride as extra inputs and the dequant happens per kv tile, so the
+    # pool stays 1 byte/elem in HBM and only live tiles pay the multiply.
+    if len(rest) == 6:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     b_i, ki = pl.program_id(0), pl.program_id(2)
     length = len_ref[b_i]
 
@@ -62,6 +70,9 @@ def _paged_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)          # (g, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)    # (bkv, d)
         v = v_ref[0, :, 0, :].astype(jnp.float32)    # (bkv, d)
+        if ks_ref is not None:
+            k = k * ks_ref[0, :, 0][:, None]         # per-(token, head) scale
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
@@ -85,10 +96,16 @@ def _paged_kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_decode_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         slot_idx: jax.Array, lengths: jax.Array, *,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None,
                         block_kv: int = 128, scale: float | None = None,
                         interpret: bool = False) -> jax.Array:
     """q: (b, a, d) one token per row; k_pool, v_pool: (slots, s_max, nkv, d);
     slot_idx: (b,) int32 row->slot; lengths: (b,) int32 live kv per row.
+
+    k_scale/v_scale: (slots, s_max, nkv) f32 per-(token, kv_head) dequant
+    scales for an int8 pool (both or neither); the kernel dequantizes each
+    kv tile in VMEM, so HBM traffic stays at 1 byte per cached element.
 
     Requires s_max % block_kv == 0 (ops.py clamps/pads) and a % nkv == 0.
     Returns (b, a, d); rows with length 0 return zeros.
@@ -97,22 +114,31 @@ def paged_decode_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     slots, s_max, nkv, dk = k_pool.shape
     assert d == dk and a % nkv == 0
     assert s_max % block_kv == 0, (s_max, block_kv)
+    assert (k_scale is None) == (v_scale is None)
     g = a // nkv
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     kv_steps = s_max // block_kv
     qh = q.reshape(b, nkv, g, d)
     from jax.experimental.pallas import tpu as pltpu
+    kv_spec = pl.BlockSpec((1, block_kv, 1, d),
+                           lambda bi, h, j, slot, lens: (slot[bi], j, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda bi, h, j, slot, lens: (bi, h, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [qh, k_pool, v_pool]
+    if k_scale is not None:
+        assert k_scale.shape == (slots, s_max, nkv), k_scale.shape
+        sc_spec = pl.BlockSpec((1, block_kv, 1),
+                               lambda bi, h, j, slot, lens: (slot[bi], j, h))
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nkv, kv_steps),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda bi, h, j, slot, lens: (bi, h, 0, 0)),
-            pl.BlockSpec((1, block_kv, 1, d),
-                         lambda bi, h, j, slot, lens: (slot[bi], j, h, 0)),
-            pl.BlockSpec((1, block_kv, 1, d),
-                         lambda bi, h, j, slot, lens: (slot[bi], j, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda bi, h, j, slot, lens: (bi, h, 0, 0)),
         scratch_shapes=[
@@ -127,8 +153,7 @@ def paged_decode_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
         interpret=interpret,
-    )(slot_idx.astype(jnp.int32), lengths.astype(jnp.int32), qh,
-      k_pool, v_pool)
+    )(slot_idx.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
     return out.reshape(b, a, d)
 
 
@@ -136,6 +161,8 @@ def paged_decode_blocktable_pallas(q: jax.Array, k_blocks: jax.Array,
                                    v_blocks: jax.Array,
                                    block_tables: jax.Array,
                                    lengths: jax.Array, *,
+                                   k_scale: jax.Array | None = None,
+                                   v_scale: jax.Array | None = None,
                                    block_kv: int | None = None,
                                    scale: float | None = None,
                                    interpret: bool = False) -> jax.Array:
@@ -143,6 +170,10 @@ def paged_decode_blocktable_pallas(q: jax.Array, k_blocks: jax.Array,
     block_size, nkv, d) physical KV block pool; block_tables: (b,
     max_blocks) int32 — row b's logical kv block j lives in physical block
     `block_tables[b, j]`; lengths: (b,) live kv per row.
+
+    k_scale/v_scale: (num_blocks, block_size, nkv) f32 per-(token, kv_head)
+    dequant scales for an int8 block pool (both or neither); tiles are
+    dequantized in VMEM after the gather-by-table DMA.
 
     block_kv (default block_size) must divide block_size; the grid runs
     max_blocks * block_size/block_kv kv steps per (row, head) and skips
@@ -154,6 +185,7 @@ def paged_decode_blocktable_pallas(q: jax.Array, k_blocks: jax.Array,
     nb, block_size, nkv, dk = k_blocks.shape
     bt_rows, max_blocks = block_tables.shape
     assert d == dk and a % nkv == 0 and bt_rows == b
+    assert (k_scale is None) == (v_scale is None)
     block_kv = block_kv or block_size
     assert block_size % block_kv == 0, (block_size, block_kv)
     g = a // nkv
@@ -172,15 +204,26 @@ def paged_decode_blocktable_pallas(q: jax.Array, k_blocks: jax.Array,
             lambda bi, h, j, table, lens: (table[bi, j // steps_per_block],
                                            j % steps_per_block, h, 0))
 
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda bi, h, j, table, lens: (bi, h, 0, 0)),
+        kv_spec(),
+        kv_spec(),
+    ]
+    operands = [qh, k_blocks, v_blocks]
+    if k_scale is not None:
+        assert k_scale.shape == (nb, block_size, nkv), k_scale.shape
+        def sc_spec():
+            return pl.BlockSpec(
+                (1, block_kv, 1),
+                lambda bi, h, j, table, lens: (table[bi, j // steps_per_block],
+                                               j % steps_per_block, h))
+        in_specs += [sc_spec(), sc_spec()]
+        operands += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nkv, kv_steps),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda bi, h, j, table, lens: (bi, h, 0, 0)),
-            kv_spec(),
-            kv_spec(),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda bi, h, j, table, lens: (bi, h, 0, 0)),
         scratch_shapes=[
@@ -198,6 +241,5 @@ def paged_decode_blocktable_pallas(q: jax.Array, k_blocks: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qh,
-      k_blocks, v_blocks)
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
     return out.reshape(b, a, d)

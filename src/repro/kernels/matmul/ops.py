@@ -96,9 +96,13 @@ def alignment_report(m: int, k: int, n: int, dtype=jnp.bfloat16,
     not a byte count) and `hw_name` default to the benchmark dtype and
     `get_hardware()`'s default chip; callers on other hardware thread their
     own through."""
+    from ...core.gemm_model import GEMM, recommend_precision
     hw = get_hardware(hw_name) if hw_name else get_hardware()
     dtype_bytes = jnp.dtype(dtype).itemsize
     util = tile_utilization(m, n, k, hw, dtype_bytes)
+    gemm = GEMM("alignment_report", m, k, n, dtype_bytes=dtype_bytes)
+    rec_dtype, rec_speedup = recommend_precision(
+        gemm, hw, dtypes=(jnp.dtype(dtype).name, "int8"))
     return {
         "hw_name": hw.name,
         "dtype": jnp.dtype(dtype).name,
@@ -106,4 +110,9 @@ def alignment_report(m: int, k: int, n: int, dtype=jnp.bfloat16,
         "padded_shape": (round_up(m, 128), round_up(k, 128), round_up(n, 128)),
         "aligned": util > 0.999,
         "vmem_per_tile_bytes": (128 * 128 * dtype_bytes * 2 + 128 * 128 * 4),
+        # dtype-aware pricing: int8 weights win exactly where the GEMM is
+        # bandwidth-bound (see core.gemm_model.recommend_precision)
+        "int8_utilization": tile_utilization(m, n, k, hw, 1),
+        "recommended_dtype": rec_dtype,
+        "recommended_speedup": rec_speedup,
     }

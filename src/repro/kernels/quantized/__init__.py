@@ -1,0 +1,5 @@
+"""Low-precision Pallas GEMM kernels: int8 (per-channel scales, i32
+accumulate, f32 de-scale epilogue), emulated fp8, and the int8-weight fused
+MLP.  Public entry points live in `ops`; `ref` holds the jnp oracles."""
+from .ops import fp8_matmul, int8_fused_mlp_hidden, int8_fused_mlp_op_name, int8_matmul  # noqa: F401
+from .ref import fp8_matmul_ref, int8_fused_mlp_ref, int8_matmul_ref  # noqa: F401

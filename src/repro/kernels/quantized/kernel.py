@@ -1,0 +1,171 @@
+"""int8 Pallas GEMM kernels: i32 accumulate on the MXU's integer path,
+f32 de-scale in the epilogue.
+
+Same grid discipline as kernels/matmul — (m_blocks, n_blocks, k_steps) with
+k innermost and a VMEM scratch carrying partial sums across the sequential
+k steps — but the accumulator is int32 (int8 x int8 products are exact in
+i32 for any k the VMEM model admits) and the scales enter only at the last
+k step:
+
+    o[i, j] = (acc_i32[i, j] * a_scale[i] * b_scale[j]).astype(out)
+
+Scale operands ride in as (block_m, 1) / (1, block_n) BlockSpecs indexed by
+the same i/j as their payload, so the epilogue multiply is a broadcast over
+the output tile — no extra HBM pass.
+
+The int8 native tile is (32, 128) — 32 sublanes because four int8 rows pack
+per 4-byte register lane row — so the candidate lattice
+(tuning.candidates.int8_matmul_candidates) quantizes block_m/block_k to 32s
+where the bf16 lattice uses 16s.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fused_mlp.ref import ACTS, is_gated
+
+
+def _i32_vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.int32)
+
+
+def _int8_matmul_kernel(a_ref, b_ref, as_ref, bs_ref, o_ref, acc_ref, *,
+                        k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        deq = acc_ref[...].astype(jnp.float32) * as_ref[...] * bs_ref[...]
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def int8_matmul_pallas(a_q: jax.Array, b_q: jax.Array,
+                       a_scale: jax.Array, b_scale: jax.Array, *,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128, out_dtype=jnp.float32,
+                       interpret: bool = False) -> jax.Array:
+    """C = dequant(A_q @ B_q).  a_q: (m, k) int8, a_scale: (m, 1) f32;
+    b_q: (k, n) int8, b_scale: (1, n) f32.  Requires block-divisible shapes
+    (ops.int8_matmul pads misaligned problems and slices the result)."""
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    assert a_scale.shape == (m, 1) and b_scale.shape == (1, n), (
+        a_scale.shape, b_scale.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        "int8_matmul_pallas requires padded shapes; use ops.int8_matmul")
+    k_steps = k // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+    return pl.pallas_call(
+        functools.partial(_int8_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[_i32_vmem((block_m, block_n))],
+        interpret=interpret,
+    )(a_q, b_q, a_scale, b_scale)
+
+
+def _int8_gated_kernel(x_ref, wg_ref, wu_ref, xs_ref, gs_ref, us_ref, o_ref,
+                       acc_g, acc_u, *, k_steps: int, mlp_type: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[...]
+    acc_g[...] += jnp.dot(x, wg_ref[...], preferred_element_type=jnp.int32)
+    acc_u[...] += jnp.dot(x, wu_ref[...], preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        act, _ = ACTS[mlp_type]
+        xs = xs_ref[...]
+        gate = acc_g[...].astype(jnp.float32) * xs * gs_ref[...]
+        up = acc_u[...].astype(jnp.float32) * xs * us_ref[...]
+        o_ref[...] = (act(gate) * up).astype(o_ref.dtype)
+
+
+def _int8_plain_kernel(x_ref, wu_ref, xs_ref, us_ref, o_ref, acc_u, *,
+                       k_steps: int, mlp_type: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    acc_u[...] += jnp.dot(x_ref[...], wu_ref[...],
+                          preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        act, _ = ACTS[mlp_type]
+        up = acc_u[...].astype(jnp.float32) * xs_ref[...] * us_ref[...]
+        o_ref[...] = act(up).astype(o_ref.dtype)
+
+
+def int8_fused_mlp_pallas(x_q: jax.Array, wg_q, wu_q: jax.Array,
+                          x_scale: jax.Array, wg_scale, wu_scale: jax.Array, *,
+                          mlp_type: str = "swiglu", block_m: int = 128,
+                          block_f: int = 128, block_k: int = 128,
+                          out_dtype=jnp.float32,
+                          interpret: bool = False) -> jax.Array:
+    """int8-weight fused-MLP hidden: de-scaled gate/up GEMMs + activation
+    combine in one pass.  x_q: (m, h) int8, x_scale: (m, 1) f32;
+    w*_q: (h, f) int8, w*_scale: (1, f) f32.  Two i32 accumulators carry the
+    pair; scales and the nonlinearity enter only at the final k step."""
+    m, h = x_q.shape
+    h2, f = wu_q.shape
+    assert h == h2, (x_q.shape, wu_q.shape)
+    assert x_scale.shape == (m, 1) and wu_scale.shape == (1, f), (
+        x_scale.shape, wu_scale.shape)
+    assert m % block_m == 0 and f % block_f == 0 and h % block_k == 0, (
+        "int8_fused_mlp_pallas requires padded shapes; "
+        "use ops.int8_fused_mlp_hidden")
+    gated = is_gated(mlp_type)
+    if gated:
+        assert wg_q is not None and wg_q.shape == wu_q.shape
+        assert wg_scale is not None and wg_scale.shape == wu_scale.shape
+    k_steps = h // block_k
+    grid = (m // block_m, f // block_f, k_steps)
+    xspec = pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk))
+    wspec = pl.BlockSpec((block_k, block_f), lambda i, j, kk: (kk, j))
+    xs_spec = pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0))
+    ws_spec = pl.BlockSpec((1, block_f), lambda i, j, kk: (0, j))
+    ospec = pl.BlockSpec((block_m, block_f), lambda i, j, kk: (i, j))
+    acc = _i32_vmem((block_m, block_f))
+    if gated:
+        return pl.pallas_call(
+            functools.partial(_int8_gated_kernel, k_steps=k_steps,
+                              mlp_type=mlp_type),
+            grid=grid,
+            in_specs=[xspec, wspec, wspec, xs_spec, ws_spec, ws_spec],
+            out_specs=ospec,
+            out_shape=jax.ShapeDtypeStruct((m, f), out_dtype),
+            scratch_shapes=[acc, acc],
+            interpret=interpret,
+        )(x_q, wg_q, wu_q, x_scale, wg_scale, wu_scale)
+    return pl.pallas_call(
+        functools.partial(_int8_plain_kernel, k_steps=k_steps,
+                          mlp_type=mlp_type),
+        grid=grid,
+        in_specs=[xspec, wspec, xs_spec, ws_spec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((m, f), out_dtype),
+        scratch_shapes=[acc],
+        interpret=interpret,
+    )(x_q, wu_q, x_scale, wu_scale)

@@ -1,0 +1,50 @@
+"""jnp reference implementations for the low-precision kernels.
+
+Each oracle consumes the SAME quantized operands as its Pallas counterpart
+(quantization happens once, in ops.py, outside both paths), so parity tests
+isolate the kernel arithmetic from the quantization rounding itself.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...quant import fp8_round_trip
+from ..fused_mlp.ref import ACTS, is_gated
+
+
+def int8_matmul_ref(a_q, a_scale, b_q, b_scale, out_dtype=None):
+    """De-scaled int8 GEMM oracle: widen to f32, contract, apply the
+    per-row activation scale and per-output-channel weight scale.
+
+    a_q: (m, k) int8, a_scale: (m, 1) f32;
+    b_q: (k, n) int8, b_scale: (1, n) f32.
+    """
+    out_dtype = out_dtype or jnp.float32
+    acc = jnp.dot(a_q.astype(jnp.float32), b_q.astype(jnp.float32))
+    return (acc * a_scale * b_scale).astype(out_dtype)
+
+
+def fp8_matmul_ref(a, b, fp8_dtype: str = "float8_e4m3fn", out_dtype=None):
+    """Emulated-fp8 GEMM oracle: round both operands through fp8 storage,
+    then contract in f32 (the bf16-MXU-path stand-in)."""
+    out_dtype = out_dtype or a.dtype
+    a8 = fp8_round_trip(a.astype(jnp.float32), fp8_dtype)
+    b8 = fp8_round_trip(b.astype(jnp.float32), fp8_dtype)
+    return jnp.dot(a8, b8).astype(out_dtype)
+
+
+def int8_fused_mlp_ref(x_q, x_scale, wg_q, wg_scale, wu_q, wu_scale, *,
+                       mlp_type: str = "swiglu", out_dtype=None):
+    """Oracle for the int8-weight fused-MLP hidden: de-scaled gate/up GEMMs
+    plus the elementwise activation combine, all in f32.
+
+    x_q: (m, h) int8, x_scale: (m, 1); w*_q: (h, f) int8, w*_scale: (1, f).
+    """
+    out_dtype = out_dtype or jnp.float32
+    act, _ = ACTS[mlp_type]
+    xf = x_q.astype(jnp.float32)
+    up = jnp.dot(xf, wu_q.astype(jnp.float32)) * x_scale * wu_scale
+    if is_gated(mlp_type):
+        gate = jnp.dot(xf, wg_q.astype(jnp.float32)) * x_scale * wg_scale
+        return (act(gate) * up).astype(out_dtype)
+    return act(up).astype(out_dtype)

@@ -80,7 +80,7 @@ def run_engine(cfg, params, args) -> None:
     eng = Engine(params, cfg, max_batch=args.batch,
                  max_prompt=args.prompt_len, max_new=args.gen,
                  use_paged_kernel=args.paged, grow_batch=args.grow_batch,
-                 prefix_cache=args.prefix_cache)
+                 prefix_cache=args.prefix_cache, kv_dtype=args.kv_dtype)
     pol = eng.policy
     print(f"bucket policy: {pol.num_slots} slots x {pol.seq_max} kv depth, "
           f"prompt buckets {list(pol.prompt_buckets)} "
@@ -142,6 +142,9 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--paged", action="store_true",
                     help="decode attention via the Pallas paged kernel")
+    ap.add_argument("--kv-dtype", default="auto", choices=["auto", "int8"],
+                    help="KV-cache storage dtype: int8 halves pool bytes "
+                         "(vs bf16) with per-(token, head) f32 scales")
     ap.add_argument("--grow-batch", action="store_true",
                     help="let the advisor grow the slot bucket when the "
                          "calibrated model predicts enough amortization")

@@ -126,6 +126,10 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
         k = apply_rotary(k, positions, cfg.rope_theta)
     new_cache = None
     kv_len = None
+    # int8 KV cache (cfg.kv_dtype="int8"): quantize per (token, kv_head) on
+    # write; dequantize on read (jnp paths) or in-kernel (paged kernels)
+    quant = cache is not None and "k_scale" in cache
+    k_scale = v_scale = None
     if block_tables is not None:
         assert cache is not None and kv_input is None
         ci = jnp.asarray(cache_index)
@@ -135,37 +139,82 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
         rows = jnp.arange(b)
         phys = block_tables[rows, ci // blk]
         off = ci % blk
-        kc = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
-        vc = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
-        new_cache = {"k": kc, "v": vc}
+        if quant:
+            from ..quant import dequantize_kv, quantize_kv
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            kc = cache["k"].at[phys, off].set(kq[:, 0])
+            vc = cache["v"].at[phys, off].set(vq[:, 0])
+            k_scale = cache["k_scale"].at[phys, off].set(ks[:, 0])
+            v_scale = cache["v_scale"].at[phys, off].set(vs[:, 0])
+            new_cache = {"k": kc, "v": vc,
+                         "k_scale": k_scale, "v_scale": v_scale}
+        else:
+            kc = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+            vc = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": kc, "v": vc}
         lengths = (ci + 1).astype(jnp.int32)
         if cfg.attn_impl == "paged":
             from ..kernels.flash_attention.ops import (default_interpret,
                                                        paged_decode_blocktable)
             out = paged_decode_blocktable(
-                q[:, 0], kc.astype(q.dtype), vc.astype(q.dtype),
-                block_tables, lengths, tuned=True,
-                interpret=default_interpret())[:, None]
+                q[:, 0], kc if quant else kc.astype(q.dtype),
+                vc if quant else vc.astype(q.dtype),
+                block_tables, lengths, k_scale=k_scale, v_scale=v_scale,
+                tuned=True, interpret=default_interpret())[:, None]
         else:
             from ..kernels.flash_attention.ref import gather_block_kv
-            out = _sdpa(q, gather_block_kv(kc, block_tables).astype(q.dtype),
-                        gather_block_kv(vc, block_tables).astype(q.dtype),
+            kg = gather_block_kv(kc, block_tables)
+            vg = gather_block_kv(vc, block_tables)
+            if quant:
+                kg = dequantize_kv(kg, gather_block_kv(k_scale, block_tables),
+                                   q.dtype)
+                vg = dequantize_kv(vg, gather_block_kv(v_scale, block_tables),
+                                   q.dtype)
+            out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype),
                         causal=causal, q_pos=positions, kv_len=lengths)
         out = linear(out.reshape(b, s, a * hd), p["wo"], impl=impl)
         return out, new_cache
     if cache is not None and kv_input is None:
         ci = jnp.asarray(cache_index)
-        if ci.ndim:  # per-row write positions (serving-engine slot pool)
-            assert s == 1, "vector cache_index requires single-token decode"
-            write = jnp.arange(cache["k"].shape[1]) == ci[:, None]  # (b, s_max)
-            sel = write[:, :, None, None]
-            k = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
-            v = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        if quant:
+            from ..quant import dequantize_kv, quantize_kv
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            if ci.ndim:  # per-row write positions (serving-engine slot pool)
+                assert s == 1, "vector cache_index requires single-token decode"
+                write = jnp.arange(cache["k"].shape[1]) == ci[:, None]
+                sel = write[:, :, None, None]
+                kq = jnp.where(sel, kq, cache["k"])
+                vq = jnp.where(sel, vq, cache["v"])
+                k_scale = jnp.where(write[:, :, None], ks, cache["k_scale"])
+                v_scale = jnp.where(write[:, :, None], vs, cache["v_scale"])
+            else:
+                upd = jax.lax.dynamic_update_slice_in_dim
+                kq = upd(cache["k"], kq, cache_index, axis=1)
+                vq = upd(cache["v"], vq, cache_index, axis=1)
+                k_scale = upd(cache["k_scale"], ks, cache_index, axis=1)
+                v_scale = upd(cache["v_scale"], vs, cache_index, axis=1)
+            new_cache = {"k": kq, "v": vq,
+                         "k_scale": k_scale, "v_scale": v_scale}
+            kv_len = ci + s
+            if cfg.attn_impl == "paged" and s == 1:
+                k, v = kq, vq  # paged kernel dequantizes per kv tile
+            else:
+                k = dequantize_kv(kq, k_scale, q.dtype)
+                v = dequantize_kv(vq, v_scale, q.dtype)
         else:
-            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
-            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
-        new_cache = {"k": k, "v": v}
-        kv_len = ci + s
+            if ci.ndim:  # per-row write positions (serving-engine slot pool)
+                assert s == 1, "vector cache_index requires single-token decode"
+                write = jnp.arange(cache["k"].shape[1]) == ci[:, None]  # (b, s_max)
+                sel = write[:, :, None, None]
+                k = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+                v = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+            else:
+                k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+                v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+            new_cache = {"k": k, "v": v}
+            kv_len = ci + s
     # 2-D positions are per-row query positions; _sdpa masks them row-wise
     q_pos = positions
     is_decode = cache is not None and s == 1
@@ -175,9 +224,10 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, causal=True,
         from ..kernels.flash_attention.ops import (default_interpret,
                                                    paged_decode)
         lengths = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
-        out = paged_decode(q[:, 0], k.astype(q.dtype), v.astype(q.dtype),
+        out = paged_decode(q[:, 0], k if quant else k.astype(q.dtype),
+                           v if quant else v.astype(q.dtype),
                            jnp.arange(b, dtype=jnp.int32), lengths,
-                           tuned=True,
+                           k_scale=k_scale, v_scale=v_scale, tuned=True,
                            interpret=default_interpret())[:, None]
     elif cfg.attn_impl == "flash" and not is_decode and cache is None:
         # Pallas flash kernel with its custom-VJP fused backward: the

@@ -99,6 +99,24 @@ def init_shared(key, cfg: ModelConfig):
 
 # --- caches --------------------------------------------------------------------------
 
+KV_DTYPES = ("auto", "int8")
+
+
+def kv_cache_dtype(cfg: ModelConfig, dtype):
+    """Storage dtype for k/v cache leaves: `cfg.kv_dtype` ("auto" resolves to
+    the compute dtype; "int8" stores quantized k/v plus f32 scale leaves)."""
+    if cfg.kv_dtype == "auto":
+        return dtype
+    if cfg.kv_dtype == "int8":
+        if cfg.attn_type == "mla":
+            raise ValueError(
+                "kv_dtype='int8' is not supported with attn_type='mla' "
+                "(the latent cache feeds back through projections, not raw k/v)")
+        return jnp.int8
+    raise ValueError(
+        f"unknown kv_dtype {cfg.kv_dtype!r}; valid: {list(KV_DTYPES)}")
+
+
 def _kv_cache_shape(cfg: ModelConfig, batch: int, s_max: int):
     if cfg.attn_type == "mla":
         return {"latent": (batch, s_max, cfg.kv_lora_rank + cfg.qk_rope_dim)}
@@ -110,8 +128,15 @@ def init_cache_segment(cfg: ModelConfig, kind: str, n: int, batch: int,
                        s_max: int, dtype=jnp.bfloat16):
     """Cache pytree for one segment (leading dim n, scanned with the layers)."""
     def kv():
-        return {k: jnp.zeros((n,) + shp, dtype)
-                for k, shp in _kv_cache_shape(cfg, batch, s_max).items()}
+        store = kv_cache_dtype(cfg, dtype)
+        leaves = {k: jnp.zeros((n,) + shp, store)
+                  for k, shp in _kv_cache_shape(cfg, batch, s_max).items()}
+        if store == jnp.int8:
+            # absmax scale per (token, kv_head): head_dim is the reduce axis
+            for name in ("k", "v"):
+                leaves[f"{name}_scale"] = jnp.zeros(
+                    (n, batch, s_max, cfg.num_kv_heads), jnp.float32)
+        return leaves
 
     if kind in ("dense", "moe"):
         return kv()

@@ -10,7 +10,7 @@ import jax
 
 from ..configs.base import ModelConfig
 from .layers import activation, dense_init
-from .linear import fused_mlp, linear, resolve_impl
+from .linear import fused_mlp, linear, quantized_mlp, resolve_impl
 
 
 def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
@@ -36,6 +36,9 @@ def apply_mlp(p, x, cfg: ModelConfig):
         # gate+up GEMM pair and the silu*mul combine run as ONE Pallas
         # kernel (kernels/fused_mlp); the down GEMM dispatches tuned
         return fused_mlp(x, p, cfg)
+    if impl == "quantized":
+        # int8-weight fused hidden + quantized down projection
+        return quantized_mlp(x, p, cfg)
     if cfg.mlp_type == "swiglu":
         g = jax.nn.silu(linear(x, p["w_gate"], impl=impl))
         u = linear(x, p["w_up"], impl=impl)

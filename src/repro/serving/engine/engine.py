@@ -163,10 +163,20 @@ class Engine:
                  use_paged_kernel: bool = False,
                  grow_batch: bool = False,
                  prefix_cache: bool = False,
-                 block_size: Optional[int] = None):
+                 block_size: Optional[int] = None,
+                 kv_dtype: str = "auto"):
         _check_supported(cfg)
         if use_paged_kernel:
             cfg = dataclasses.replace(cfg, attn_impl="paged")
+        from ...models.blocks import KV_DTYPES
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {kv_dtype!r}; valid: {list(KV_DTYPES)}")
+        if kv_dtype != "auto":
+            # int8 pool: k/v leaves store 1 byte/elem + f32 per-(token, head)
+            # scale leaves; everything downstream (pools, prefill/decode
+            # programs, paged kernels) keys off cfg.kv_dtype
+            cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
         self.params = params
         self.cfg = cfg
         hw = hw or get_hardware()

@@ -15,27 +15,35 @@ into a calibration layer for `core.advisor` predictions.
 wrappers, which themselves import `tuning.cache` — eager import would cycle.
 """
 from .cache import (TunedConfig, TuningCache, cache_key, default_cache_path,
-                    get_default_cache, lookup, set_default_cache)
+                    get_default_cache, lookup, mixed_dtype, set_default_cache)
 from .candidates import (bucket_steps, flash_backward_candidates,
                          flash_bwd_vmem_bytes, flash_candidates,
-                         flash_vmem_bytes, fused_mlp_candidates,
-                         fused_mlp_vmem_bytes, matmul_candidates,
+                         flash_vmem_bytes, fp8_matmul_candidates,
+                         fp8_matmul_vmem_bytes, fused_mlp_candidates,
+                         fused_mlp_vmem_bytes, int8_fused_mlp_candidates,
+                         int8_fused_mlp_vmem_bytes, int8_matmul_candidates,
+                         int8_matmul_vmem_bytes, matmul_candidates,
                          matmul_vmem_bytes, paged_blocktable_candidates,
                          paged_decode_candidates)
 from .measure import wall_us
 
 _SEARCH_EXPORTS = ("autotune_matmul", "autotune_flash_attention",
                    "autotune_flash_backward", "autotune_fused_mlp",
+                   "autotune_int8_matmul", "autotune_fp8_matmul",
+                   "autotune_int8_fused_mlp",
                    "autotune_paged_decode",
                    "autotune_paged_decode_blocktable",
                    "flash_op_name", "flash_bwd_op_name")
 
 __all__ = [
     "TunedConfig", "TuningCache", "cache_key", "default_cache_path",
-    "get_default_cache", "lookup", "set_default_cache",
+    "get_default_cache", "lookup", "mixed_dtype", "set_default_cache",
     "bucket_steps", "flash_backward_candidates", "flash_bwd_vmem_bytes",
     "flash_candidates", "flash_vmem_bytes",
+    "fp8_matmul_candidates", "fp8_matmul_vmem_bytes",
     "fused_mlp_candidates", "fused_mlp_vmem_bytes",
+    "int8_fused_mlp_candidates", "int8_fused_mlp_vmem_bytes",
+    "int8_matmul_candidates", "int8_matmul_vmem_bytes",
     "matmul_candidates", "matmul_vmem_bytes", "paged_blocktable_candidates",
     "paged_decode_candidates",
     "wall_us", *_SEARCH_EXPORTS,

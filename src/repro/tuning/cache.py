@@ -72,6 +72,16 @@ def cache_key(op: str, shape: Iterable[int], dtype: str, hw_name: str) -> str:
     return f"{op}/{'x'.join(str(int(s)) for s in shape)}/{dtype}/{hw_name}"
 
 
+def mixed_dtype(act_dtype: str, weight_dtype: str) -> str:
+    """Cache dtype key for mixed-precision ops: encodes *both* operand
+    dtypes (e.g. ``bfloat16xint8``) so an int8-weight entry can never
+    shadow — or be shadowed by — a uniform-dtype entry for the same shape.
+    Uniform ops keep the plain single-dtype key unchanged."""
+    if act_dtype == weight_dtype:
+        return act_dtype
+    return f"{act_dtype}x{weight_dtype}"
+
+
 class TuningCache:
     """In-memory view of the JSON tuning cache."""
 

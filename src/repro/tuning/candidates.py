@@ -204,6 +204,79 @@ def fused_mlp_candidates(m: int, h: int, f: int, hw: Hardware | None = None,
         hw, dtype_bytes, max_candidates)
 
 
+def int8_matmul_vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """VMEM working set of kernels/quantized int8 matmul: double-buffered
+    int8 A and B blocks (1 byte/elem), the i32 accumulator scratch, the f32
+    scale rows/cols, and the output block (f32 worst case).  Halving operand
+    bytes roughly doubles the feasible block area vs the bf16 lattice —
+    the dtype/shape coupling the paper's alignment rules predict."""
+    a_blk = block_m * block_k * 1
+    b_blk = block_k * block_n * 1
+    scales = (block_m + block_n) * 4
+    acc = block_m * block_n * 4
+    out = block_m * block_n * 4
+    return DOUBLE_BUFFER * (a_blk + b_blk + scales) + acc + out
+
+
+def int8_matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
+                           max_candidates: int | None = None
+                           ) -> List[Tuple[int, int, int]]:
+    """All (block_m, block_n, block_k) worth timing for an int8 (m, k, n)
+    GEMM.  The lattice quantizes block_m to the *int8* sublane granule
+    (32 on TPU — four int8 rows pack per register row) under the int8 VMEM
+    model; the 128^3 default is always included."""
+    return _gemm_lattice(
+        m, n, k,
+        lambda bm, bn, bk: int8_matmul_vmem_bytes(bm, bn, bk),
+        hw, 1, max_candidates)
+
+
+def fp8_matmul_vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """VMEM working set of the emulated-fp8 matmul.  The GEMM itself runs
+    the bf16-path kernel on widened operands, so the resident footprint is
+    the 2-byte matmul model — fp8 only changes the HBM story."""
+    return matmul_vmem_bytes(block_m, block_n, block_k, 2)
+
+
+def fp8_matmul_candidates(m: int, k: int, n: int, hw: Hardware | None = None,
+                          max_candidates: int | None = None
+                          ) -> List[Tuple[int, int, int]]:
+    """(block_m, block_n, block_k) lattice for the emulated-fp8 GEMM: bf16
+    tile granules (the compute path is the bf16 MXU) bounded by
+    `fp8_matmul_vmem_bytes`."""
+    return _gemm_lattice(
+        m, n, k,
+        lambda bm, bn, bk: fp8_matmul_vmem_bytes(bm, bn, bk),
+        hw, 2, max_candidates)
+
+
+def int8_fused_mlp_vmem_bytes(block_m: int, block_f: int, block_k: int,
+                              gated: bool = True) -> int:
+    """VMEM working set of the int8-weight fused MLP: double-buffered int8 x
+    and weight blocks plus f32 scale vectors, one i32 accumulator per GEMM
+    of the pair, and the f32 hidden output block."""
+    nw = 2 if gated else 1
+    x_blk = block_m * block_k * 1
+    w_blk = nw * block_k * block_f * 1
+    scales = (block_m + nw * block_f) * 4
+    acc = nw * block_m * block_f * 4
+    out = block_m * block_f * 4
+    return DOUBLE_BUFFER * (x_blk + w_blk + scales) + acc + out
+
+
+def int8_fused_mlp_candidates(m: int, h: int, f: int,
+                              hw: Hardware | None = None, gated: bool = True,
+                              max_candidates: int | None = None
+                              ) -> List[Tuple[int, int, int]]:
+    """(block_m, block_f, block_k) lattice for the int8 fused-MLP hidden:
+    int8 sublane granule on block_m, bounded by `int8_fused_mlp_vmem_bytes`
+    (two i32 accumulators for the gated pair); 128^3 always included."""
+    return _gemm_lattice(
+        m, f, h,
+        lambda bm, bn, bk: int8_fused_mlp_vmem_bytes(bm, bn, bk, gated),
+        hw, 1, max_candidates)
+
+
 def paged_decode_candidates(s_max: int, head_dim: int, group: int = 1,
                             hw: Hardware | None = None, dtype_bytes: int = 2,
                             max_candidates: int | None = None) -> List[int]:

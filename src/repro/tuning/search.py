@@ -24,10 +24,12 @@ import jax.numpy as jnp
 
 from .. import obs
 from ..core.hardware import Hardware, get_hardware
-from .cache import TunedConfig, TuningCache, get_default_cache
+from .cache import TunedConfig, TuningCache, get_default_cache, mixed_dtype
 from .candidates import (flash_backward_candidates, flash_candidates,
-                         fused_mlp_candidates, matmul_candidates,
-                         paged_blocktable_candidates, paged_decode_candidates)
+                         fp8_matmul_candidates, fused_mlp_candidates,
+                         int8_fused_mlp_candidates, int8_matmul_candidates,
+                         matmul_candidates, paged_blocktable_candidates,
+                         paged_decode_candidates)
 from .measure import wall_us
 
 DEFAULT_MATMUL_BLOCKS = (128, 128, 128)
@@ -165,6 +167,158 @@ def autotune_fused_mlp(m: int, h: int, f: int, *, mlp_type: str = "swiglu",
     cfg = TunedConfig(
         op=fused_mlp_op_name(mlp_type), shape=(m, h, f),
         dtype=_dtype_name(dtype), hw_name=hw.name,
+        blocks={"block_m": best.blocks[0], "block_f": best.blocks[1],
+                "block_k": best.blocks[2]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_int8_matmul(m: int, k: int, n: int, *, dtype=jnp.float32,
+                         hw: Optional[Hardware] = None,
+                         cache: Optional[TuningCache] = None,
+                         interpret: bool = True, iters: int = 3,
+                         warmup: int = 1,
+                         max_candidates: Optional[int] = None,
+                         verbose: bool = False) -> TunedConfig:
+    """Sweep (block_m, block_n, block_k) for an int8-weight (m, k, n) GEMM
+    over the int8 lattice (32-sublane granule, int8 VMEM model); persist and
+    return the winner under op "int8_matmul" with the *mixed* dtype key
+    (activation x weight, e.g. "float32xint8") — the key
+    `int8_matmul(tuned=True)` looks up."""
+    from ..kernels.quantized.ops import int8_matmul
+    from ..quant import quantize_weight
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    cands = int8_matmul_candidates(m, k, n, hw, max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k)).astype(dtype)
+    wq = quantize_weight(
+        jax.random.normal(jax.random.fold_in(key, 1), (k, n)).astype(dtype))
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bm, bn, bk in cands:
+        t, std = _measure(
+            "int8_matmul",
+            lambda a, bm=bm, bn=bn, bk=bk: int8_matmul(
+                a, wq, block_m=bm, block_n=bn, block_k=bk,
+                interpret=interpret),
+            a, iters=iters, warmup=warmup)
+        trials.append(Trial((bm, bn, bk), t, std))
+        if (bm, bn, bk) == DEFAULT_MATMUL_BLOCKS:
+            baseline_us = t
+        if verbose:
+            print(f"  int8_matmul {m}x{k}x{n} blocks=({bm},{bn},{bk}): "
+                  f"{t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op="int8_matmul", shape=(m, k, n),
+        dtype=mixed_dtype(_dtype_name(dtype), "int8"), hw_name=hw.name,
+        blocks={"block_m": best.blocks[0], "block_n": best.blocks[1],
+                "block_k": best.blocks[2]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_fp8_matmul(m: int, k: int, n: int, *,
+                        fp8_dtype: str = "float8_e4m3fn", dtype=jnp.float32,
+                        hw: Optional[Hardware] = None,
+                        cache: Optional[TuningCache] = None,
+                        interpret: bool = True, iters: int = 3,
+                        warmup: int = 1,
+                        max_candidates: Optional[int] = None,
+                        verbose: bool = False) -> TunedConfig:
+    """Sweep blocks for the emulated-fp8 (m, k, n) GEMM; persist the winner
+    under op "fp8_matmul" with the mixed dtype key (e.g.
+    "float32xfloat8_e4m3fn")."""
+    from ..kernels.quantized.ops import fp8_matmul
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    cands = fp8_matmul_candidates(m, k, n, hw, max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k)).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n)).astype(dtype)
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bm, bn, bk in cands:
+        t, std = _measure(
+            "fp8_matmul",
+            lambda a, b, bm=bm, bn=bn, bk=bk: fp8_matmul(
+                a, b, fp8_dtype=fp8_dtype, block_m=bm, block_n=bn,
+                block_k=bk, interpret=interpret),
+            a, b, iters=iters, warmup=warmup)
+        trials.append(Trial((bm, bn, bk), t, std))
+        if (bm, bn, bk) == DEFAULT_MATMUL_BLOCKS:
+            baseline_us = t
+        if verbose:
+            print(f"  fp8_matmul[{fp8_dtype}] {m}x{k}x{n} "
+                  f"blocks=({bm},{bn},{bk}): {t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op="fp8_matmul", shape=(m, k, n),
+        dtype=mixed_dtype(_dtype_name(dtype), fp8_dtype), hw_name=hw.name,
+        blocks={"block_m": best.blocks[0], "block_n": best.blocks[1],
+                "block_k": best.blocks[2]},
+        time_us=best.time_us, baseline_us=baseline_us,
+        candidates_tried=len(trials), time_us_std=best.time_us_std)
+    cache.put(cfg)
+    return cfg
+
+
+def autotune_int8_fused_mlp(m: int, h: int, f: int, *,
+                            mlp_type: str = "swiglu", dtype=jnp.float32,
+                            hw: Optional[Hardware] = None,
+                            cache: Optional[TuningCache] = None,
+                            interpret: bool = True, iters: int = 3,
+                            warmup: int = 1,
+                            max_candidates: Optional[int] = None,
+                            verbose: bool = False) -> TunedConfig:
+    """Sweep (block_m, block_f, block_k) for the int8-weight fused-MLP
+    hidden; persist the winner under op "int8_fused_mlp_<mlp_type>" with the
+    mixed dtype key."""
+    from ..kernels.fused_mlp.ref import is_gated
+    from ..kernels.quantized.ops import (int8_fused_mlp_hidden,
+                                         int8_fused_mlp_op_name)
+    from ..quant import quantize_weight
+
+    hw = hw or get_hardware()
+    cache = cache if cache is not None else get_default_cache()
+    gated = is_gated(mlp_type)
+    cands = int8_fused_mlp_candidates(m, h, f, hw, gated=gated,
+                                      max_candidates=max_candidates)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, h)).astype(dtype)
+    wg = (quantize_weight(jax.random.normal(
+        jax.random.fold_in(key, 1), (h, f)).astype(dtype)) if gated else None)
+    wu = quantize_weight(jax.random.normal(
+        jax.random.fold_in(key, 2), (h, f)).astype(dtype))
+
+    trials: List[Trial] = []
+    baseline_us = 0.0
+    for bm, bf, bk in cands:
+        t, std = _measure(
+            int8_fused_mlp_op_name(mlp_type),
+            lambda x, bm=bm, bf=bf, bk=bk: int8_fused_mlp_hidden(
+                x, wg, wu, mlp_type=mlp_type, block_m=bm, block_f=bf,
+                block_k=bk, interpret=interpret),
+            x, iters=iters, warmup=warmup)
+        trials.append(Trial((bm, bf, bk), t, std))
+        if (bm, bf, bk) == DEFAULT_FUSED_MLP_BLOCKS:
+            baseline_us = t
+        if verbose:
+            print(f"  int8_fused_mlp[{mlp_type}] {m}x{h}x{f} "
+                  f"blocks=({bm},{bf},{bk}): {t:.1f} us")
+    best = min(trials, key=lambda t: t.time_us)
+    cfg = TunedConfig(
+        op=int8_fused_mlp_op_name(mlp_type), shape=(m, h, f),
+        dtype=mixed_dtype(_dtype_name(dtype), "int8"), hw_name=hw.name,
         blocks={"block_m": best.blocks[0], "block_f": best.blocks[1],
                 "block_k": best.blocks[2]},
         time_us=best.time_us, baseline_us=baseline_us,

@@ -1,0 +1,396 @@
+"""Low-precision execution: quant helpers, int8/fp8 Pallas GEMM parity,
+int8 fused-MLP, quantized linear dispatch, mixed-dtype tuning keys, and the
+pre-PR tuning-cache JSON format regression."""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.kernels.quantized.ops import (fp8_matmul, int8_fused_mlp_hidden,
+                                         int8_matmul)
+from repro.models import apply_lm, init_lm
+from repro.models.linear import (QUANT_WEIGHT_KEYS, QuantizedLinear, linear,
+                                 quantize_linear_params, quantized_mlp)
+from repro.quant import (FP8_DTYPES, QuantizedTensor, dequantize_int8,
+                         fp8_round_trip, kv_bytes_per_token, quantize_int8,
+                         quantize_weight)
+from repro.tuning import TuningCache, set_default_cache
+from repro.tuning.cache import cache_key, mixed_dtype
+from repro.tuning.search import (autotune_fp8_matmul, autotune_int8_fused_mlp,
+                                 autotune_int8_matmul)
+
+KEY = jax.random.PRNGKey(0)
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+
+
+@pytest.fixture(autouse=True)
+def _reset_default_cache():
+    yield
+    set_default_cache(None)
+
+
+# -- quant helpers -----------------------------------------------------------
+
+class TestQuantHelpers:
+    def test_int8_round_trip(self):
+        x = jax.random.normal(KEY, (16, 64))
+        q, scale = quantize_int8(x)
+        assert q.dtype == jnp.int8
+        assert scale.shape == (16, 1)
+        back = dequantize_int8(q, scale)
+        # symmetric absmax: worst-case error is half a quantization step
+        step = np.asarray(scale).max()
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   atol=0.51 * step)
+
+    def test_quantize_weight_per_output_channel(self):
+        # give column j dynamic range ~(j+1): per-channel scales must track it
+        w = jax.random.normal(KEY, (32, 8)) * jnp.arange(1.0, 9.0)
+        qt = quantize_weight(w)
+        assert isinstance(qt, QuantizedTensor)
+        assert qt.q.dtype == jnp.int8 and qt.q.shape == w.shape
+        assert qt.scale.shape == (1, 8) and qt.axis == -2
+        assert bool(jnp.all(qt.scale[0, 1:] > qt.scale[0, :-1] * 0.5))
+        back = qt.q.astype(jnp.float32) * qt.scale
+        rel = np.abs(np.asarray(back - w)).max() / np.abs(np.asarray(w)).max()
+        assert rel < 0.01
+
+    @pytest.mark.parametrize("fp8", FP8_DTYPES)
+    def test_fp8_round_trip(self, fp8):
+        x = jax.random.normal(KEY, (8, 32))
+        y = fp8_round_trip(x, fp8)
+        assert y.dtype == x.dtype
+        # e4m3 has a 3-bit mantissa -> ~6% worst-case relative rounding
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                                   rtol=0.13, atol=1e-3)
+
+    def test_unknown_dtypes_raise(self):
+        x = jnp.ones((4, 4))
+        with pytest.raises(ValueError, match="unknown quant dtype"):
+            quantize_weight(x, "int4")
+        with pytest.raises(ValueError, match="unknown fp8 dtype"):
+            fp8_round_trip(x, "float8_bogus")
+
+    def test_kv_bytes_per_token(self):
+        # bf16 baseline: 2 bytes/elem for K and V
+        assert kv_bytes_per_token(8, 128) == 2 * 8 * 128 * 2
+        # int8: 1 byte/elem + one f32 scale per (token, head) for K and V
+        assert kv_bytes_per_token(8, 128, "int8") == 2 * 8 * 128 + 2 * 8 * 4
+        # halving only approaches 2x as head_dim grows past the scale overhead
+        assert (kv_bytes_per_token(8, 128) / kv_bytes_per_token(8, 128, "int8")
+                > 1.9)
+
+
+# -- int8 / fp8 GEMM kernels -------------------------------------------------
+
+def _operands(m, k, n, dtype=jnp.float32):
+    a = (jax.random.normal(KEY, (m, k)) * 0.5).astype(dtype)
+    w = (jax.random.normal(jax.random.fold_in(KEY, 1), (k, n)) * 0.5
+         ).astype(dtype)
+    return a, w
+
+
+class TestInt8Matmul:
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (40, 72, 56),
+                                       (96, 200, 136)])
+    def test_pallas_matches_jnp_ref(self, shape):
+        a, w = _operands(*shape)
+        got = int8_matmul(a, w, interpret=True)
+        want = int8_matmul(a, w, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_close_to_f32_gemm(self):
+        a, w = _operands(64, 128, 64)
+        got = np.asarray(int8_matmul(a, w, interpret=True))
+        want = np.asarray(a @ w)
+        rel = np.abs(got - want).max() / np.abs(want).max()
+        assert rel < 0.02  # quantization noise only
+
+    def test_block_size_invariance(self):
+        a, w = _operands(100, 72, 60)
+        base = np.asarray(int8_matmul(a, w, interpret=True))
+        for bm, bn, bk in [(32, 32, 32), (64, 128, 64), (256, 256, 256)]:
+            got = np.asarray(int8_matmul(a, w, block_m=bm, block_n=bn,
+                                         block_k=bk, interpret=True))
+            np.testing.assert_allclose(got, base, atol=3e-5, rtol=3e-5)
+
+    def test_prequantized_weight_matches_float_weight(self):
+        a, w = _operands(32, 64, 48)
+        got = int8_matmul(a, quantize_weight(w), interpret=True)
+        want = int8_matmul(a, w, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-6, rtol=3e-6)
+
+    def test_raw_int8_weight_rejected(self):
+        a = jnp.ones((8, 16))
+        wq = jnp.ones((16, 8), jnp.int8)
+        with pytest.raises(ValueError, match="QuantizedTensor"):
+            int8_matmul(a, wq)
+
+
+class TestFp8Matmul:
+    @pytest.mark.parametrize("fp8", FP8_DTYPES)
+    def test_pallas_matches_jnp_ref(self, fp8):
+        a, w = _operands(48, 72, 40)
+        got = fp8_matmul(a, w, fp8_dtype=fp8, interpret=True)
+        want = fp8_matmul(a, w, fp8_dtype=fp8, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_close_to_f32_gemm(self):
+        a, w = _operands(32, 128, 32)
+        got = np.asarray(fp8_matmul(a, w, interpret=True))
+        want = np.asarray(a @ w)
+        rel = np.abs(got - want).max() / np.abs(want).max()
+        assert rel < 0.05
+
+    def test_unknown_fp8_dtype_raises(self):
+        a, w = _operands(8, 8, 8)
+        with pytest.raises(ValueError, match="fp8"):
+            fp8_matmul(a, w, fp8_dtype="float8_bogus")
+
+
+class TestInt8FusedMlp:
+    @pytest.mark.parametrize("mlp_type", ["swiglu", "gelu"])
+    @pytest.mark.parametrize("shape", [(64, 64, 128), (40, 72, 88)])
+    def test_pallas_matches_jnp_ref(self, mlp_type, shape):
+        m, h, f = shape
+        x = jax.random.normal(KEY, (m, h)) * 0.5
+        wg = (jax.random.normal(jax.random.fold_in(KEY, 1), (h, f)) * 0.5
+              if mlp_type == "swiglu" else None)
+        wu = jax.random.normal(jax.random.fold_in(KEY, 2), (h, f)) * 0.5
+        got = int8_fused_mlp_hidden(x, wg, wu, mlp_type=mlp_type,
+                                    interpret=True)
+        want = int8_fused_mlp_hidden(x, wg, wu, mlp_type=mlp_type,
+                                     use_pallas=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-5, rtol=5e-5)
+
+    def test_close_to_float_reference(self):
+        from repro.kernels.fused_mlp.ref import fused_mlp_hidden_ref
+        m, h, f = 32, 64, 96
+        x = jax.random.normal(KEY, (m, h)) * 0.5
+        wg = jax.random.normal(jax.random.fold_in(KEY, 1), (h, f)) * 0.5
+        wu = jax.random.normal(jax.random.fold_in(KEY, 2), (h, f)) * 0.5
+        got = np.asarray(int8_fused_mlp_hidden(x, wg, wu, interpret=True))
+        want = np.asarray(fused_mlp_hidden_ref(x, wg, wu, "swiglu"))
+        denom = np.abs(want).max()
+        assert np.abs(got - want).max() / denom < 0.03
+
+
+# -- mixed-dtype tuning keys + tuned dispatch --------------------------------
+
+class TestMixedDtypeTuning:
+    def test_mixed_dtype_key(self):
+        assert mixed_dtype("bfloat16", "int8") == "bfloat16xint8"
+        assert mixed_dtype("float32", "float8_e4m3fn") == "float32xfloat8_e4m3fn"
+        assert cache_key("int8_matmul", (8, 16, 32),
+                         mixed_dtype("float32", "int8"),
+                         "tpu_v5e") == "int8_matmul/8x16x32/float32xint8/tpu_v5e"
+
+    def test_autotune_int8_matmul_writes_mixed_key(self):
+        cache = TuningCache()
+        cfg = autotune_int8_matmul(64, 64, 64, cache=cache, iters=1,
+                                   warmup=0, max_candidates=2)
+        assert cfg.op == "int8_matmul" and cfg.dtype == "float32xint8"
+        assert cache.get("int8_matmul", (64, 64, 64), "float32xint8",
+                         cfg.hw_name) is not None
+
+    def test_autotune_fp8_matmul_writes_mixed_key(self):
+        cache = TuningCache()
+        cfg = autotune_fp8_matmul(64, 64, 64, cache=cache, iters=1,
+                                  warmup=0, max_candidates=2)
+        assert cfg.dtype == "float32xfloat8_e4m3fn"
+
+    def test_autotune_int8_fused_mlp_writes_mixed_key(self):
+        cache = TuningCache()
+        cfg = autotune_int8_fused_mlp(64, 64, 64, cache=cache, iters=1,
+                                      warmup=0, max_candidates=2)
+        assert cfg.op == "int8_fused_mlp_swiglu"
+        assert cfg.dtype == "float32xint8"
+
+    def test_tuned_dispatch_consults_mixed_key(self, monkeypatch):
+        """int8_matmul(tuned=True) must look up the mixed activationxweight
+        key, not the plain activation dtype."""
+        from repro.kernels.quantized import ops as qops
+        seen = []
+        real = qops._tuning_lookup
+
+        def spy(op, shape, dtype, hw):
+            seen.append((op, shape, dtype))
+            return real(op, shape, dtype, hw)
+
+        monkeypatch.setattr(qops, "_tuning_lookup", spy)
+        a, w = _operands(32, 32, 32)
+        int8_matmul(a, w, tuned=True, interpret=True)
+        assert seen == [("int8_matmul", (32, 32, 32), "float32xint8")]
+
+    def test_tuned_hit_applies_cached_blocks(self):
+        cache = TuningCache()
+        cfg = autotune_int8_matmul(64, 64, 64, cache=cache, iters=1,
+                                   warmup=0, max_candidates=3)
+        set_default_cache(cache)
+        a, w = _operands(64, 64, 64)
+        got = int8_matmul(a, w, tuned=True, interpret=True)
+        want = int8_matmul(a, w, block_m=cfg.blocks["block_m"],
+                           block_n=cfg.blocks["block_n"],
+                           block_k=cfg.blocks["block_k"], interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestCacheFormatRegression:
+    """Cache files written before the low-precision PR must load unchanged
+    and survive a save/load round trip byte-compatibly — mixed-dtype entries
+    extend the key vocabulary, not the schema."""
+
+    def test_prequant_fixture_round_trips(self, tmp_path):
+        src = FIXTURES / "tuning_cache_prequant.json"
+        cache = TuningCache.load(str(src))
+        assert len(cache.entries) == 3
+        got = cache.get("matmul", (512, 512, 512), "bfloat16", "tpu_v5e")
+        assert got is not None
+        assert got.blocks == {"block_k": 128, "block_m": 512, "block_n": 128}
+        assert got.time_us == pytest.approx(812.4)
+        assert got.baseline_us == pytest.approx(1034.9)
+
+        out = tmp_path / "rt.json"
+        cache.save(str(out))
+        with open(src) as f:
+            want = json.load(f)
+        with open(out) as f:
+            have = json.load(f)
+        assert have == want
+
+    def test_mixed_entries_coexist_with_prequant_entries(self, tmp_path):
+        cache = TuningCache.load(str(FIXTURES / "tuning_cache_prequant.json"))
+        autotune_int8_matmul(64, 64, 64, cache=cache, iters=1, warmup=0,
+                             max_candidates=1)
+        out = tmp_path / "mixed.json"
+        cache.save(str(out))
+        re = TuningCache.load(str(out))
+        assert re.get("matmul", (512, 512, 512), "bfloat16",
+                      "tpu_v5e") is not None
+        assert re.get("int8_matmul", (64, 64, 64), "float32xint8",
+                      re.by_op("int8_matmul")[0].hw_name) is not None
+
+
+# -- linear dispatch ---------------------------------------------------------
+
+class TestQuantizedLinearDispatch:
+    def test_forward_close_to_jnp(self):
+        x = jax.random.normal(KEY, (2, 8, 64)) * 0.5
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 32)) * 0.5
+        got = np.asarray(linear(x, w, impl="quantized"))
+        want = np.asarray(linear(x, w, impl="jnp"))
+        assert got.shape == (2, 8, 32)
+        rel = np.abs(got - want).max() / np.abs(want).max()
+        assert rel < 0.02
+
+    def test_frozen_weight_matches_float_weight(self):
+        x = jax.random.normal(KEY, (16, 32))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (32, 24))
+        got = linear(x, quantize_weight(w), impl="quantized")
+        want = linear(x, w, impl="quantized")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-6, rtol=3e-6)
+
+    def test_straight_through_gradients(self):
+        x = jax.random.normal(KEY, (8, 32))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (32, 16))
+
+        def loss(x, w):
+            return jnp.sum(linear(x, w, impl="quantized") ** 2)
+
+        dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+        assert dx.shape == x.shape and dw.shape == w.shape
+        assert bool(jnp.all(jnp.isfinite(dx))) and bool(jnp.all(jnp.isfinite(dw)))
+        # straight-through: must be close to the float-path gradients
+        fdx, fdw = jax.grad(lambda x, w: jnp.sum((x @ w) ** 2),
+                            argnums=(0, 1))(x, w)
+        for got, want in ((dx, fdx), (dw, fdw)):
+            got, want = np.asarray(got), np.asarray(want)
+            assert np.abs(got - want).max() / np.abs(want).max() < 0.05
+
+    def test_frozen_weight_gradient_flows_to_activation(self):
+        x = jax.random.normal(KEY, (8, 32))
+        qt = quantize_weight(jax.random.normal(KEY, (32, 16)))
+        dx = jax.grad(
+            lambda x: jnp.sum(linear(x, qt, impl="quantized") ** 2))(x)
+        assert bool(jnp.all(jnp.isfinite(dx)))
+
+    def test_unknown_impl_raises(self):
+        with pytest.raises(ValueError, match="unknown linear_impl 'int4'"):
+            linear(jnp.ones((4, 8)), jnp.ones((8, 4)), impl="int4")
+
+    def test_quantize_linear_params_filters_by_name(self):
+        params = {
+            "blocks": [{"attn": {"wq": jnp.ones((8, 8)),
+                                 "wo": jnp.ones((8, 8))},
+                        "mlp": {"w_up": jnp.ones((8, 16)),
+                                "norm_gain": jnp.ones((8,))}}],
+            "embed": jnp.ones((32, 8)),          # not a GEMM weight leaf
+            "lm_head": jnp.ones((8, 32)),
+            "conv_kernel": jnp.ones((4, 8)),     # 2-D but not in the key set
+        }
+        q = quantize_linear_params(params)
+        blk = q["blocks"][0]
+        assert isinstance(blk["attn"]["wq"], QuantizedLinear)
+        assert isinstance(blk["attn"]["wo"], QuantizedLinear)
+        assert isinstance(blk["mlp"]["w_up"], QuantizedLinear)
+        assert isinstance(q["lm_head"], QuantizedLinear)
+        # non-GEMM leaves pass through untouched
+        assert not isinstance(q["embed"], QuantizedLinear)
+        assert not isinstance(q["conv_kernel"], QuantizedLinear)
+        assert not isinstance(blk["mlp"]["norm_gain"], QuantizedLinear)
+        assert "conv_kernel" not in QUANT_WEIGHT_KEYS
+
+    def test_quantized_mlp_matches_reference(self):
+        cfg = get_smoke_config("internlm2-1.8b")
+        h, f = cfg.d_model, cfg.d_ff
+        p = {"w_gate": jax.random.normal(KEY, (h, f)) * 0.3,
+             "w_up": jax.random.normal(jax.random.fold_in(KEY, 1),
+                                       (h, f)) * 0.3,
+             "w_down": jax.random.normal(jax.random.fold_in(KEY, 2),
+                                         (f, h)) * 0.3}
+        x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 4, h)) * 0.5
+        got = np.asarray(quantized_mlp(x, p, cfg))
+        from repro.kernels.fused_mlp.ref import fused_mlp_hidden_ref
+        hid = fused_mlp_hidden_ref(x.reshape(-1, h), p["w_gate"], p["w_up"],
+                                   cfg.mlp_type)
+        want = np.asarray((hid @ p["w_down"]).reshape(2, 4, h))
+        rel = np.abs(got - want).max() / np.abs(want).max()
+        assert rel < 0.05
+
+
+# -- end-to-end on registry configs (acceptance) -----------------------------
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "qwen1.5-4b"])
+class TestQuantizedModelEndToEnd:
+    """linear_impl="quantized" must run a full forward and a full backward on
+    real registry configs (smoke-scaled) — the acceptance criterion for the
+    dispatch layer."""
+
+    def test_forward_and_grad(self, arch):
+        cfg = dataclasses.replace(get_smoke_config(arch),
+                                  linear_impl="quantized")
+        params = init_lm(KEY, cfg)
+        toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+        logits, _, _ = apply_lm(params, toks, cfg)
+        assert logits.shape == (1, 8, cfg.padded_vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+        def loss(p):
+            lg, _, _ = apply_lm(p, toks, cfg)
+            return jnp.mean(lg.astype(jnp.float32) ** 2)
+
+        grads = jax.grad(loss)(params)
+        flat = jax.tree_util.tree_leaves(grads)
+        assert flat and all(
+            bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+            for g in flat if g.dtype != jax.dtypes.float0)

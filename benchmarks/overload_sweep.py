@@ -1,0 +1,161 @@
+"""Goodput and tail TTFT under 1x / 2x / 4x offered load.
+
+The engine is sized for a known sustainable throughput (pool slots x
+calibrated decode-step time); this sweep offers multiples of it and
+measures how the admission controller degrades:
+
+  * 1x — arrivals match service capacity: everything should complete, no
+    shedding, goodput ~1.0;
+  * 2x / 4x — the queue grows without bound if nothing sheds.  With a
+    `ShedPolicy` (queue depth + predicted-TTFT SLO) the engine must drop
+    the excess *at admission* (cheap: no slot, no prefill) and keep p99
+    TTFT of the admitted requests bounded, instead of serving everyone
+    late — or worse, crashing.
+
+Offered load is controlled through the arrival gap: capacity is
+pool_slots / mean_new_tokens requests per step, so a gap of
+mean_new / slots steps is 1x and dividing it by the load factor overloads.
+Every run is crash-free by construction (run() never raises per-request) —
+the sweep asserts that and records the finish_reason breakdown.
+
+    PYTHONPATH=src python -m benchmarks.overload_sweep --json BENCH_overload.json
+    PYTHONPATH=src python -m benchmarks.overload_sweep --gate   # CI smoke
+
+--gate checks the hardening contract at 2x overload: zero crashes, zero
+rejected (the workload is valid), and goodput >= 0.9 on ADMITTED requests
+(shedding is the mechanism, so shed requests don't count against it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+NUM_REQUESTS = 32
+MAX_PROMPT = 48
+MAX_NEW = 16
+LOADS = (1.0, 2.0, 4.0)
+QUEUE_DEPTH = 8
+SLO_STEPS = 48          # ttft_slo_s = SLO_STEPS * calibrated step_s
+
+
+def _model():
+    from repro.configs.registry import get_smoke_config
+    from repro.models import init_lm
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def sweep(num_requests=NUM_REQUESTS, loads=LOADS):
+    from repro.serving.engine import Engine, ShedPolicy, synthetic_requests
+
+    cfg, params = _model()
+    eng = Engine(params, cfg, max_batch=8, max_prompt=MAX_PROMPT,
+                 max_new=MAX_NEW)
+    step_s = eng.calibrate_step_s()
+    slots = eng.policy.num_slots
+    mean_new = (MAX_NEW // 4 + MAX_NEW) / 2
+    gap_1x = mean_new / slots       # steps between arrivals at 1x load
+    shed = ShedPolicy(max_queue_depth=QUEUE_DEPTH,
+                      ttft_slo_s=SLO_STEPS * step_s, step_s=step_s)
+
+    results = []
+    for load in loads:
+        reqs = synthetic_requests(
+            num_requests, pattern="uniform", min_prompt=4,
+            max_prompt=MAX_PROMPT, min_new=MAX_NEW // 4, max_new=MAX_NEW,
+            vocab=cfg.vocab_size, step_s=step_s,
+            arrival_gap_steps=max(gap_1x / load, 1e-3), seed=29)
+        done, stats = eng.run(reqs, shed=shed)
+        assert len(done) == num_requests, "a request went missing"
+        ok_ttfts = sorted(c.ttft_s for c in done if c.ok)
+        p99 = ok_ttfts[min(int(len(ok_ttfts) * 0.99),
+                           len(ok_ttfts) - 1)] if ok_ttfts else 0.0
+        results.append({
+            "load": load,
+            "offered_gap_steps": gap_1x / load,
+            "goodput": stats.goodput,
+            "num_ok": stats.num_ok,
+            "num_shed": stats.num_shed,
+            "num_timeout": stats.num_timeout,
+            "num_rejected": stats.num_rejected,
+            "finish_reasons": stats.finish_reasons,
+            "ttft_ok_p99_s": p99,
+            "tok_s": stats.tok_s,
+            "stats": stats.to_json(),
+        })
+    return {
+        "workload": {"num_requests": num_requests, "max_prompt": MAX_PROMPT,
+                     "max_new": MAX_NEW, "pattern": "uniform"},
+        "engine": {"slots": slots, "seq_max": eng.policy.seq_max,
+                   "step_s": step_s},
+        "shed_policy": {"max_queue_depth": QUEUE_DEPTH,
+                        "ttft_slo_steps": SLO_STEPS},
+        "loads": results,
+    }
+
+
+def run(json_path=None):
+    summary = sweep()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+    rows = []
+    for r in summary["loads"]:
+        rows.append((f"overload/{r['load']:g}x",
+                     f"{r['ttft_ok_p99_s']*1e6:.0f}",
+                     f"{r['goodput']:.2f}_goodput_{r['num_shed']}_shed_"
+                     f"{r['num_timeout']}_timeout"))
+    return rows
+
+
+def gate(summary) -> list:
+    """CI contract at 2x overload (see module docstring).  Returns the list
+    of violations (empty = pass)."""
+    problems = []
+    by_load = {r["load"]: r for r in summary["loads"]}
+    two = by_load.get(2.0)
+    if two is None:
+        return ["no 2x load point in the sweep"]
+    if two["num_rejected"]:
+        problems.append(f"2x: {two['num_rejected']} rejected "
+                        f"(workload is valid; rejects mean a bug)")
+    if two["goodput"] < 0.9:
+        problems.append(f"2x: goodput {two['goodput']:.3f} < 0.9 on "
+                        f"admitted requests")
+    four = by_load.get(4.0)
+    if four is not None and four["num_ok"] == 0:
+        problems.append("4x: nothing completed — shedding starved the "
+                        "engine instead of protecting it")
+    return problems
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="persist the sweep summary (BENCH_overload.json)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail unless the 2x-overload hardening contract "
+                         "holds (CI smoke)")
+    args = ap.parse_args()
+    summary = sweep()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+    for r in summary["loads"]:
+        print(f"overload/{r['load']:g}x,{r['ttft_ok_p99_s']*1e6:.0f},"
+              f"{r['goodput']:.2f}_goodput_{r['num_shed']}_shed_"
+              f"{r['num_timeout']}_timeout")
+    if args.gate:
+        problems = gate(summary)
+        if problems:
+            raise SystemExit("overload gate FAILED:\n  " +
+                             "\n  ".join(problems))
+        print("overload gate: OK (2x overload, zero crashes, "
+              f"goodput {next(r for r in summary['loads'] if r['load'] == 2.0)['goodput']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

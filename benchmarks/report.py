@@ -311,8 +311,58 @@ def serve_section(rows):
         out.append("**Continuous vs static aggregate tok/s:** "
                    + ", ".join(f"{p} {g:.2f}x" for p, g in gains) + ".")
         out.append("")
+    out += failure_class_lines(rows)
     if prefix_rows:
         out += prefix_cache_section(prefix_rows)
+    return out
+
+
+def failure_class_lines(rows):
+    """Failure-class breakdown next to the latency percentiles: every request
+    lands in exactly one finish_reason bucket (docs/serving-guide.md,
+    'Failure semantics & overload'); a healthy closed-loop run is all
+    stop/length, so anything else here is signal."""
+    reasons = defaultdict(int)
+    preempt = resumes = 0
+    for r in rows:
+        for k, v in (r.get("finish_reasons") or {}).items():
+            reasons[k] += v
+        preempt += r.get("preemptions", 0)
+        resumes += r.get("resumes", 0)
+    if not reasons:
+        return []
+    parts = ", ".join(f"{k} {v}" for k, v in sorted(reasons.items()))
+    out = [f"**Failure classes (all runs):** {parts}."]
+    if preempt or resumes:
+        out.append(f"**KV preemptions:** {preempt} "
+                   f"({resumes} resumed exactly via the prefix cache).")
+    out.append("")
+    return out
+
+
+def overload_section(summary):
+    """Overload sweep (BENCH_overload.json): goodput + shed/timeout counts
+    and p99 TTFT of completed requests as offered load scales past
+    capacity — the graceful-degradation contract the CI gate enforces."""
+    eng = summary.get("engine", {})
+    shed = summary.get("shed_policy", {})
+    out = ["### Overload (admission control under 1x/2x/4x offered load)",
+           "",
+           f"`benchmarks/overload_sweep.py`: {eng.get('slots', '?')} slots, "
+           f"shed policy depth={shed.get('max_queue_depth')}, "
+           f"TTFT SLO={shed.get('ttft_slo_steps')} steps.  Overload is shed "
+           "at admission (no slot, no prefill); goodput = ok / admitted.  "
+           "The CI gate requires 2x overload to complete crash-free with "
+           "goodput >= 0.9.", ""]
+    out.append("| offered load | ok | shed | timeout | goodput | "
+               "TTFT ok p99 ms | tok/s |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in summary.get("loads", []):
+        out.append(
+            f"| {r['load']:g}x | {r['num_ok']} | {r['num_shed']} | "
+            f"{r['num_timeout']} | {r['goodput']:.2f} | "
+            f"{r['ttft_ok_p99_s']*1e3:.1f} | {r['tok_s']:.1f} |")
+    out.append("")
     return out
 
 
@@ -404,6 +454,8 @@ def main():
     ap.add_argument("--perf", nargs="*", default=[])
     ap.add_argument("--serve", default=None,
                     help="serve_engine.jsonl from benchmarks.serve_engine")
+    ap.add_argument("--overload", default=None,
+                    help="BENCH_overload.json from benchmarks.overload_sweep")
     ap.add_argument("--train-attn", default=None,
                     help="train_attention.jsonl from "
                          "benchmarks.train_attention_sweep")
@@ -444,6 +496,9 @@ def main():
         lines += quant_section(_load(args.quant))
     if args.serve:
         lines += serve_section(_load(args.serve))
+    if args.overload and os.path.exists(args.overload):
+        with open(args.overload) as f:
+            lines += overload_section(json.load(f))
     if args.obs:
         lines += obs_section(args.obs)
     if args.analysis is not None:

@@ -23,6 +23,7 @@ MODULES = [
     "train_attention_sweep", # beyond-paper: fused-attn training step times
     "mlp_fusion_sweep",      # beyond-paper: fused vs unfused MLP, d_ff alignment
     "quant_sweep",           # beyond-paper: int8/fp8 GEMMs, int8 KV, dtype pricing
+    "overload_sweep",        # beyond-paper: goodput/shedding under overload
 ]
 
 

@@ -67,9 +67,31 @@ def run_static(cfg, params, args) -> None:
     print("sample:", np.asarray(toks[0, :16]))
 
 
+def parse_shed_policy(spec: str, step_s: float):
+    """`--shed-policy depth=16,slo=0.25,lookahead=4` -> ShedPolicy.
+    `step_s` is the calibrated decode-step time (the TTFT predictor)."""
+    from ..serving.engine import ShedPolicy
+
+    kw = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        key, _, val = part.partition("=")
+        if key == "depth":
+            kw["max_queue_depth"] = int(val)
+        elif key == "slo":
+            kw["ttft_slo_s"] = float(val)
+        elif key == "lookahead":
+            kw["lookahead"] = int(val)
+        else:
+            raise SystemExit(f"--shed-policy: unknown key {key!r} "
+                             f"(valid: depth, slo, lookahead)")
+    return ShedPolicy(step_s=step_s, **kw)
+
+
 def run_engine(cfg, params, args) -> None:
     """Continuous-batching engine over a synthetic request stream."""
-    from ..serving.engine import Engine, synthetic_requests
+    import dataclasses
+
+    from ..serving.engine import Engine, FaultPlan, synthetic_requests
 
     if args.obs_dump:
         obs.enable()
@@ -100,7 +122,20 @@ def run_engine(cfg, params, args) -> None:
         max_prompt=args.prompt_len, min_new=max(args.gen // 4, 1),
         max_new=args.gen, vocab=cfg.vocab_size, step_s=step_s,
         temperature=args.temperature, seed=args.seed)
-    done, stats = eng.run(reqs)
+    if args.deadline_s is not None:
+        reqs = [dataclasses.replace(r, deadline_s=args.deadline_s)
+                for r in reqs]
+    shed = (parse_shed_policy(args.shed_policy, step_s)
+            if args.shed_policy else None)
+    faults = None
+    if args.chaos_seed is not None:
+        faults = FaultPlan.generate(args.chaos_seed, [r.rid for r in reqs],
+                                    num_steps=max(args.gen * 2, 8))
+        reqs = faults.apply_to_requests(reqs, eng.policy.seq_max)
+        print(f"chaos: seed {args.chaos_seed}, request faults "
+              f"{faults.request_faults}, {len(faults.events)} step events")
+    done, stats = eng.run(reqs, shed=shed, faults=faults,
+                          check_invariants=faults is not None)
 
     if watch is not None:
         watch.check()
@@ -114,7 +149,13 @@ def run_engine(cfg, params, args) -> None:
           f"p99 {stats.ttft_p99_s*1e3:8.1f} ms")
     print(f"inter-token p50 {stats.itl_p50_s*1e3:8.1f} ms   "
           f"p99 {stats.itl_p99_s*1e3:8.1f} ms")
-    print("sample:", done[0].tokens[:16])
+    if stats.num_ok != stats.num_requests:
+        parts = "  ".join(f"{k}={v}" for k, v in stats.finish_reasons.items())
+        print(f"outcomes:   {parts}  | goodput {stats.goodput:.3f} "
+              f"(preemptions {stats.preemptions}, resumes {stats.resumes})")
+    first_ok = next((c for c in done if c.ok), None)
+    if first_ok is not None:
+        print("sample:", first_ok.tokens[:16])
 
     if args.obs_dump:
         paths = obs.export_all(args.obs_dump, drift=eng.drift, watch=watch)
@@ -151,6 +192,18 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", action="store_true",
                     help="block-table KV pool with content-addressed prefix "
                          "sharing")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request completion deadline in seconds; "
+                         "expiry returns the partial result as "
+                         "finish_reason=timeout")
+    ap.add_argument("--shed-policy", default=None, metavar="SPEC",
+                    help="admission control, e.g. 'depth=16,slo=0.25"
+                         "[,lookahead=4]': shed beyond a ready-queue depth "
+                         "and/or a predicted-TTFT SLO")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded FaultPlan (bad prompts, deadline "
+                         "pressure, block steals, COW storms) and assert "
+                         "pool invariants every step")
     ap.add_argument("--obs-dump", default=None, metavar="DIR",
                     help="enable observability and write trace/metrics/drift "
                          "dumps to DIR (see `python -m repro.obs.view DIR`)")

@@ -103,6 +103,11 @@ class SlotPool:
     def alloc(self) -> Optional[int]:
         return self._free.pop() if self._free else None
 
+    def can_admit(self, prompt_len: int) -> bool:
+        """A free slot always fits a validated prompt: slots are full
+        seq_max-deep regions, so depth was checked at validation time."""
+        return bool(self._free)
+
     def release(self, slot: int) -> None:
         self.lengths[slot] = 0
         self._free.append(slot)
@@ -379,6 +384,25 @@ class BlockPool:
             self._unref(blk)
         self.seqs.pop(seq.sid, None)
 
+    def reserve(self, n: int) -> BlockSeq:
+        """Grab up to `n` blocks as an opaque held sequence (chaos / test
+        hook: simulates external memory pressure).  Takes free blocks first,
+        then evicts cached-free ones; stops early — never raises — when the
+        pool is fully referenced.  Release with `release(seq)`."""
+        table: List[int] = []
+        for _ in range(n):
+            try:
+                blk = self._alloc_block()
+            except PoolExhausted:
+                break
+            self.ref[blk] = 1
+            table.append(blk)
+        seq = BlockSeq(sid=self._next_sid, table=table,
+                       length=len(table) * self.block_size)
+        self._next_sid += 1
+        self.seqs[seq.sid] = seq
+        return seq
+
     # -- invariants (test hook) ----------------------------------------------
 
     def check(self) -> None:
@@ -507,6 +531,18 @@ class PagedPool:
 
     def alloc(self) -> Optional[int]:
         return self._free_rows.pop() if self._free_rows else None
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Conservative admissibility: a free row AND enough allocatable
+        (free + evictable cached) blocks to cover the whole prompt cold.
+        Prefix hits only reduce the real need, so True here means
+        `alloc_sequence` succeeds barring a concurrent COW burst (the
+        engine's bounded admission retry covers that residue)."""
+        if not self._free_rows:
+            return False
+        need = -(-max(prompt_len, 1) // self.block_size)
+        bp = self.blocks
+        return bp.num_free_blocks + bp.num_cached_blocks >= need
 
     def release(self, row: int) -> None:
         seq = self.row_seq[row]

@@ -196,13 +196,17 @@ class TestEngineParity:
         with pytest.raises(NotImplementedError):
             Engine(params=None, cfg=cfg)
 
-    def test_inadmissible_request_fails_fast_without_wedging(self, smoke_lm):
+    def test_inadmissible_request_rejected_without_wedging(self, smoke_lm):
+        """An inadmissible request becomes a rejected Completion — run()
+        must not raise, leak a slot, or wedge subsequent service."""
         cfg, params = smoke_lm
         eng = Engine(params, cfg, max_batch=2, max_prompt=16, max_new=8)
         bad = [Request(rid=0, tokens=np.ones(8, np.int32),
                        max_new_tokens=eng.policy.seq_max)]  # depth overflow
-        with pytest.raises(ValueError):
-            eng.run(bad)
+        done, stats = eng.run(bad)
+        assert [c.finish_reason for c in done] == ["rejected"]
+        assert done[0].tokens == [] and done[0].ttft_s is None
+        assert stats.num_rejected == 1 and stats.num_ok == 0
         assert eng.pool.num_free == eng.policy.num_slots  # no slot leaked
         ok = [Request(rid=1, tokens=np.ones(8, np.int32), max_new_tokens=3)]
         done, _ = eng.run(ok)  # engine still serves after the rejection
